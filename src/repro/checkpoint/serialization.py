@@ -1,0 +1,66 @@
+"""Leaf-array (de)serialization for FDB-backed checkpoints.
+
+Each parameter leaf travels as one FDB field: a small JSON header (dtype,
+shape) + raw bytes.  bf16 round-trips via ml_dtypes.  The tree structure is
+captured in a manifest field so restore needs no model code.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+try:  # ml_dtypes ships with jax
+    import ml_dtypes
+
+    _EXTRA = {"bfloat16": ml_dtypes.bfloat16}
+except Exception:  # pragma: no cover
+    _EXTRA = {}
+
+__all__ = ["encode_array", "decode_array", "flatten_tree", "unflatten_tree"]
+
+_MAGIC = b"RPR1"
+
+
+def encode_array(x) -> bytes:
+    arr = np.asarray(x)
+    header = json.dumps({"dtype": arr.dtype.name, "shape": list(arr.shape)}).encode()
+    return _MAGIC + len(header).to_bytes(4, "big") + header + arr.tobytes()
+
+
+def decode_array(raw: bytes) -> np.ndarray:
+    assert raw[:4] == _MAGIC, "bad checkpoint field magic"
+    hlen = int.from_bytes(raw[4:8], "big")
+    header = json.loads(raw[8 : 8 + hlen].decode())
+    dtype = _EXTRA.get(header["dtype"]) or np.dtype(header["dtype"])
+    body = raw[8 + hlen :]
+    return np.frombuffer(body, dtype=dtype).reshape(header["shape"]).copy()
+
+
+def flatten_tree(tree) -> tuple[dict[str, np.ndarray], dict]:
+    """pytree -> ({safe_name: leaf}, manifest) with reversible naming."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves: dict[str, np.ndarray] = {}
+    names: list[str] = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path).replace("'", "").replace("[", ".").replace("]", "")
+        name = name.strip(".").replace("/", "_") or "root"
+        names.append(name)
+        leaves[name] = leaf
+    manifest = {"treedef": str(treedef), "names": names}
+    return leaves, manifest
+
+
+def unflatten_tree(template, leaves_by_name: dict[str, np.ndarray]):
+    """Rebuild using a template pytree for structure (elastic-safe)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    ordered = []
+    for path, _ in flat:
+        name = jax.tree_util.keystr(path).replace("'", "").replace("[", ".").replace("]", "")
+        name = name.strip(".").replace("/", "_") or "root"
+        if name not in leaves_by_name:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        ordered.append(leaves_by_name[name])
+    return jax.tree_util.tree_unflatten(treedef, ordered)

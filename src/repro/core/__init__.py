@@ -1,0 +1,43 @@
+"""repro.core — the paper's contribution: the FDB and its two backend pairs.
+
+Public surface:
+
+- :class:`Key`, :class:`Schema` — metadata identifiers and the 3-level split
+- :class:`FDB`, :func:`make_fdb` — the facade with the paper's semantics
+- :mod:`repro.core.daos` — the emulated DAOS (MVCC KV/Array object store)
+- :mod:`repro.core.posix` / :mod:`repro.core.daos_backend` — the backends
+- :mod:`repro.core.costmodel` — Lustre-vs-DAOS per-op cost model at scale
+"""
+
+from .catalogue import Catalogue, ListEntry
+from .datahandle import DataHandle, MemoryDataHandle
+from .fdb import FDB, make_fdb
+from .keys import Key, key_union
+from .schema import (
+    CHECKPOINT_SCHEMA,
+    DATASET_SCHEMA,
+    NWP_SCHEMA_DAOS,
+    NWP_SCHEMA_POSIX,
+    Schema,
+    SplitKey,
+)
+from .store import FieldLocation, Store
+
+__all__ = [
+    "Key",
+    "key_union",
+    "Schema",
+    "SplitKey",
+    "FDB",
+    "make_fdb",
+    "Catalogue",
+    "ListEntry",
+    "Store",
+    "FieldLocation",
+    "DataHandle",
+    "MemoryDataHandle",
+    "NWP_SCHEMA_DAOS",
+    "NWP_SCHEMA_POSIX",
+    "CHECKPOINT_SCHEMA",
+    "DATASET_SCHEMA",
+]

@@ -1,0 +1,59 @@
+"""Abstract Catalogue backend interface (paper §3.2.1).
+
+The Catalogue maintains the index: element key -> field location, organised
+under dataset and collocation keys.  The index must *always* be consistent
+from the perspective of an external reader, even under read/write
+contention; replacement (re-archive of the same identifier) must be
+transactional.  ``retrieve`` of an absent field is NOT an error (the FDB may
+be used as a cache) — it returns None.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Iterable, Iterator, Mapping
+
+from .keys import Key
+from .schema import Schema
+from .store import FieldLocation
+
+__all__ = ["Catalogue", "ListEntry"]
+
+
+class ListEntry:
+    __slots__ = ("key", "location")
+
+    def __init__(self, key: Key, location: FieldLocation):
+        self.key = key
+        self.location = location
+
+    def __repr__(self) -> str:
+        return f"ListEntry({self.key!r} -> {self.location})"
+
+
+class Catalogue(abc.ABC):
+    def __init__(self, schema: Schema):
+        self.schema = schema
+
+    @abc.abstractmethod
+    def archive(self, dataset_key: Key, collocation_key: Key, element_key: Key, location: FieldLocation) -> None:
+        """Insert element->location into the index (maybe only in memory)."""
+
+    @abc.abstractmethod
+    def flush(self) -> None:
+        """Persist + publish all indexed info to external readers/listers."""
+
+    @abc.abstractmethod
+    def retrieve(self, dataset_key: Key, collocation_key: Key, element_key: Key) -> FieldLocation | None:
+        ...
+
+    @abc.abstractmethod
+    def list(self, request: Mapping[str, Iterable[str] | str]) -> Iterator[ListEntry]:
+        """All (identifier, location) pairs matching a partial request."""
+
+    @abc.abstractmethod
+    def wipe(self, dataset_key: Key) -> None:
+        """Efficiently remove an entire dataset (rolling-archive use)."""
+
+    def close(self) -> None:
+        pass

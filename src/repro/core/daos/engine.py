@@ -1,0 +1,237 @@
+"""The DAOS engine — the server side of the emulation.
+
+Exposes a flat RPC-style API mirroring the libdaos calls the FDB backends
+use.  Every call is accounted in :class:`DaosStats` (op counts, bytes moved,
+per-target distribution) — the benchmark cost model replays these counters
+through the latency model to produce the paper's scaling curves, and the
+profiling benchmark (paper Fig. 5) groups wall-time by these op names.
+
+Thread-safe; also servable over a Unix socket for true multi-process
+contention tests (:mod:`repro.core.daos.server`).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import Counter
+from dataclasses import dataclass, field
+
+from .objects import OC_S1, ArrayObject, KVObject, ObjectId, hash_dkey_to_target
+from .pool import Container, Pool
+
+__all__ = ["DaosEngine", "DaosStats", "DaosError", "ENOENT", "EEXIST"]
+
+ENOENT = 2
+EEXIST = 17
+
+
+class DaosError(OSError):
+    def __init__(self, errno_: int, msg: str):
+        super().__init__(errno_, msg)
+
+
+@dataclass
+class DaosStats:
+    ops: Counter = field(default_factory=Counter)
+    op_time: Counter = field(default_factory=Counter)  # seconds per op name
+    bytes_written: int = 0
+    bytes_read: int = 0
+    target_ops: Counter = field(default_factory=Counter)
+
+    def snapshot(self) -> dict:
+        return {
+            "ops": dict(self.ops),
+            "op_time": dict(self.op_time),
+            "bytes_written": self.bytes_written,
+            "bytes_read": self.bytes_read,
+            "target_ops": dict(self.target_ops),
+        }
+
+    def reset(self) -> None:
+        self.ops.clear()
+        self.op_time.clear()
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.target_ops.clear()
+
+
+class DaosEngine:
+    """One emulated DAOS system (any number of engines/targets).
+
+    ``n_engines`` × ``targets_per_engine`` gives the target count used for
+    dkey placement accounting (paper test system: 2 engines/node, 12
+    targets/engine).
+    """
+
+    def __init__(self, n_engines: int = 2, targets_per_engine: int = 12):
+        self.n_engines = n_engines
+        self.targets_per_engine = targets_per_engine
+        self._pools: dict[str, Pool] = {}
+        self._mu = threading.Lock()
+        self.stats = DaosStats()
+        self._stats_mu = threading.Lock()
+
+    # ------------------------------------------------------------------ util
+    @property
+    def n_targets(self) -> int:
+        return self.n_engines * self.targets_per_engine
+
+    def _account(self, op: str, *, dkey: str | None = None, nbytes_w: int = 0, nbytes_r: int = 0, dt: float = 0.0) -> None:
+        with self._stats_mu:
+            self.stats.ops[op] += 1
+            self.stats.op_time[op] += dt
+            self.stats.bytes_written += nbytes_w
+            self.stats.bytes_read += nbytes_r
+            if dkey is not None:
+                self.stats.target_ops[hash_dkey_to_target(dkey, self.n_targets)] += 1
+
+    # ------------------------------------------------------------- pool mgmt
+    def create_pool(self, label: str, *, exist_ok: bool = True) -> Pool:
+        with self._mu:
+            if label in self._pools:
+                if exist_ok:
+                    return self._pools[label]
+                raise DaosError(EEXIST, f"pool {label!r} exists")
+            pool = Pool(label, n_targets=self.n_targets)
+            self._pools[label] = pool
+            return pool
+
+    def pool_connect(self, label: str) -> Pool:
+        t0 = time.perf_counter()
+        pool = self._pools.get(label)
+        if pool is None:
+            raise DaosError(ENOENT, f"pool {label!r} not found")
+        self._account("daos_pool_connect", dt=time.perf_counter() - t0)
+        return pool
+
+    # -------------------------------------------------------------- cont mgmt
+    def cont_create(self, pool: str, label: str, *, exist_ok: bool = True) -> str:
+        t0 = time.perf_counter()
+        p = self._pools[pool]
+        try:
+            p.create_container(label, exist_ok=exist_ok)
+        except FileExistsError as e:
+            raise DaosError(EEXIST, str(e)) from e
+        self._account("daos_cont_create", dt=time.perf_counter() - t0)
+        return label
+
+    def cont_open(self, pool: str, label: str) -> str:
+        t0 = time.perf_counter()
+        p = self._pools[pool]
+        if not p.has_container(label):
+            raise DaosError(ENOENT, f"container {label!r} not found in pool {pool!r}")
+        self._account("daos_cont_open", dt=time.perf_counter() - t0)
+        return label
+
+    def cont_exists(self, pool: str, label: str) -> bool:
+        return self._pools[pool].has_container(label)
+
+    def cont_destroy(self, pool: str, label: str) -> None:
+        t0 = time.perf_counter()
+        self._pools[pool].destroy_container(label, missing_ok=True)
+        self._account("daos_cont_destroy", dt=time.perf_counter() - t0)
+
+    def cont_list(self, pool: str) -> list[str]:
+        return self._pools[pool].list_containers()
+
+    def cont_alloc_oids(self, pool: str, cont: str, count: int) -> int:
+        """``daos_cont_alloc_oids`` — returns the base of a contiguous range.
+        Clients pre-allocate and cache ranges (paper §3.1.2)."""
+        t0 = time.perf_counter()
+        base = self._cont(pool, cont).alloc_oids(count)
+        self._account("daos_cont_alloc_oids", dt=time.perf_counter() - t0)
+        return base
+
+    def _cont(self, pool: str, cont: str) -> Container:
+        p = self._pools.get(pool)
+        if p is None:
+            raise DaosError(ENOENT, f"pool {pool!r} not found")
+        try:
+            return p.open_container(cont)
+        except FileNotFoundError as e:
+            raise DaosError(ENOENT, str(e)) from e
+
+    # ---------------------------------------------------------------- KV API
+    def kv_put(self, pool: str, cont: str, oid: ObjectId, key: str, value: bytes, *, oclass: str = OC_S1) -> None:
+        t0 = time.perf_counter()
+        kv = self._cont(pool, cont).open_kv(oid, create=True, oclass=oclass)
+        kv.put(key, value)
+        self._account("daos_kv_put", dkey=f"{cont}/{oid}/{key}", nbytes_w=len(value), dt=time.perf_counter() - t0)
+
+    def kv_get(self, pool: str, cont: str, oid: ObjectId, key: str) -> bytes | None:
+        t0 = time.perf_counter()
+        try:
+            kv = self._cont(pool, cont).open_kv(oid, create=False)
+        except KeyError:
+            self._account("daos_kv_get", dkey=f"{cont}/{oid}/{key}", dt=time.perf_counter() - t0)
+            return None
+        v = kv.get(key)
+        self._account(
+            "daos_kv_get", dkey=f"{cont}/{oid}/{key}", nbytes_r=0 if v is None else len(v), dt=time.perf_counter() - t0
+        )
+        return v
+
+    def kv_remove(self, pool: str, cont: str, oid: ObjectId, key: str) -> None:
+        t0 = time.perf_counter()
+        try:
+            kv = self._cont(pool, cont).open_kv(oid, create=False)
+        except KeyError:
+            return
+        kv.remove(key)
+        self._account("daos_kv_remove", dkey=f"{cont}/{oid}/{key}", dt=time.perf_counter() - t0)
+
+    def kv_list(self, pool: str, cont: str, oid: ObjectId) -> list[str]:
+        t0 = time.perf_counter()
+        try:
+            kv = self._cont(pool, cont).open_kv(oid, create=False)
+        except KeyError:
+            self._account("daos_kv_list", dt=time.perf_counter() - t0)
+            return []
+        keys = kv.list_keys()
+        self._account("daos_kv_list", dt=time.perf_counter() - t0)
+        return keys
+
+    # -------------------------------------------------------------- Array API
+    def array_create(self, pool: str, cont: str, oid: ObjectId, *, cell_size: int = 1, chunk_size: int = 1 << 20, oclass: str = OC_S1) -> None:
+        t0 = time.perf_counter()
+        try:
+            self._cont(pool, cont).create_array(oid, oclass=oclass, cell_size=cell_size, chunk_size=chunk_size)
+        except FileExistsError as e:
+            raise DaosError(EEXIST, str(e)) from e
+        self._account("daos_array_create", dt=time.perf_counter() - t0)
+
+    def array_open_with_attrs(self, pool: str, cont: str, oid: ObjectId, *, cell_size: int = 1, chunk_size: int = 1 << 20, oclass: str = OC_S1) -> None:
+        t0 = time.perf_counter()
+        self._cont(pool, cont).open_array_with_attrs(oid, cell_size=cell_size, chunk_size=chunk_size, oclass=oclass)
+        self._account("daos_array_open_with_attrs", dt=time.perf_counter() - t0)
+
+    def array_write(self, pool: str, cont: str, oid: ObjectId, offset: int, data: bytes) -> None:
+        t0 = time.perf_counter()
+        try:
+            arr = self._cont(pool, cont).open_array(oid)
+        except FileNotFoundError:
+            # open_with_attrs-style lazy creation
+            arr = self._cont(pool, cont).open_array_with_attrs(oid)
+        arr.write(offset, data)
+        self._account("daos_array_write", dkey=f"{cont}/{oid}", nbytes_w=len(data), dt=time.perf_counter() - t0)
+
+    def array_read(self, pool: str, cont: str, oid: ObjectId, offset: int = 0, length: int | None = None) -> bytes:
+        t0 = time.perf_counter()
+        try:
+            arr = self._cont(pool, cont).open_array(oid)
+        except FileNotFoundError as e:
+            raise DaosError(ENOENT, str(e)) from e
+        data = arr.read(offset, length)
+        self._account("daos_array_read", dkey=f"{cont}/{oid}", nbytes_r=len(data), dt=time.perf_counter() - t0)
+        return data
+
+    def array_get_size(self, pool: str, cont: str, oid: ObjectId) -> int:
+        t0 = time.perf_counter()
+        try:
+            arr = self._cont(pool, cont).open_array(oid)
+        except FileNotFoundError as e:
+            raise DaosError(ENOENT, str(e)) from e
+        n = arr.get_size()
+        self._account("daos_array_get_size", dt=time.perf_counter() - t0)
+        return n

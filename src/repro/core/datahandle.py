@@ -1,0 +1,40 @@
+"""Abstract reader handles returned by Store.retrieve (paper §3.1.1)."""
+
+from __future__ import annotations
+
+import abc
+
+__all__ = ["DataHandle", "MemoryDataHandle"]
+
+
+class DataHandle(abc.ABC):
+    @abc.abstractmethod
+    def read(self) -> bytes:
+        """Read the full field."""
+
+    @abc.abstractmethod
+    def read_range(self, offset: int, length: int) -> bytes:
+        """Byte-granular partial read within the field."""
+
+    @property
+    @abc.abstractmethod
+    def size(self) -> int:
+        ...
+
+    def close(self) -> None:
+        pass
+
+
+class MemoryDataHandle(DataHandle):
+    def __init__(self, data: bytes):
+        self._data = data
+
+    def read(self) -> bytes:
+        return self._data
+
+    def read_range(self, offset: int, length: int) -> bytes:
+        return self._data[offset : offset + length]
+
+    @property
+    def size(self) -> int:
+        return len(self._data)

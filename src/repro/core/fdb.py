@@ -1,0 +1,119 @@
+"""The FDB facade — the paper's external, metadata-driven API (§1.3).
+
+Composes any conforming (Catalogue, Store) backend pair and guarantees:
+
+1. data is either visible and correctly indexed, or not (ACID);
+2. ``archive()`` blocks until the FDB has taken control of the data
+   (visibility is permitted but not required at this point);
+3. ``flush()`` blocks until everything archived by this process is
+   persisted, indexed and visible to any reader via retrieve()/list();
+4. once visible, data is immutable;
+5. re-archiving the same identifier transactionally replaces it — the old
+   data stays visible until the new is fully persisted and indexed.
+
+The one ordering invariant the facade enforces: within ``archive()`` the
+Store archives *before* the Catalogue indexes, and within ``flush()`` the
+Store flushes *before* the Catalogue publishes — so an index entry can never
+point at unpersisted bytes, on either backend.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Iterator, Mapping
+
+from .catalogue import Catalogue, ListEntry
+from .datahandle import DataHandle
+from .keys import Key
+from .schema import Schema
+from .store import Store
+
+__all__ = ["FDB", "make_fdb"]
+
+
+class FDB:
+    def __init__(self, catalogue: Catalogue, store: Store):
+        if catalogue.schema is None:
+            raise ValueError("catalogue must carry a schema")
+        self.catalogue = catalogue
+        self.store = store
+        self.schema: Schema = catalogue.schema
+
+    # ------------------------------------------------------------------ API
+    def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
+        key = key if isinstance(key, Key) else Key(key)
+        split = self.schema.split(key)
+        location = self.store.archive(bytes(data), split.dataset, split.collocation)
+        self.catalogue.archive(split.dataset, split.collocation, split.element, location)
+
+    def flush(self) -> None:
+        self.store.flush()       # data durable first …
+        self.catalogue.flush()   # … then the index publishes it
+
+    def retrieve(self, key: Key | Mapping[str, str]) -> DataHandle | None:
+        key = key if isinstance(key, Key) else Key(key)
+        split = self.schema.split(key)
+        location = self.catalogue.retrieve(split.dataset, split.collocation, split.element)
+        if location is None:
+            return None  # not an error: FDB may be a cache in a larger system
+        return self.store.retrieve(location)
+
+    def read(self, key: Key | Mapping[str, str]) -> bytes | None:
+        h = self.retrieve(key)
+        if h is None:
+            return None
+        try:
+            return h.read()
+        finally:
+            h.close()
+
+    def list(self, request: Mapping[str, Iterable[str] | str] | None = None) -> Iterator[ListEntry]:
+        return self.catalogue.list(request or {})
+
+    def wipe(self, dataset_key: Key | Mapping[str, str]) -> None:
+        dataset_key = dataset_key if isinstance(dataset_key, Key) else Key(dataset_key)
+        self.catalogue.wipe(dataset_key.subset(self.schema.dataset_keys))
+
+    def close(self) -> None:
+        self.flush()
+        self.store.close()
+        self.catalogue.close()
+
+    def __enter__(self) -> "FDB":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def make_fdb(
+    backend: str,
+    *,
+    schema: Schema,
+    root: str | None = None,
+    engine=None,
+    pool: str = "fdb",
+    **kw,
+) -> FDB:
+    """Factory: ``backend in {'posix', 'daos'}``.
+
+    posix: ``root`` directory required.
+    daos: ``engine`` (DaosEngine or DaosClient) required.
+    """
+    if backend == "posix":
+        from .posix import PosixCatalogue, PosixStore
+
+        if root is None:
+            raise ValueError("posix backend requires root=")
+        return FDB(PosixCatalogue(root, schema), PosixStore(root, **kw))
+    if backend == "daos":
+        from .daos_backend import DaosCatalogue, DaosStore
+
+        if engine is None:
+            from .daos import DaosEngine
+
+            engine = DaosEngine()
+        return FDB(
+            DaosCatalogue(engine, schema, pool=pool),
+            DaosStore(engine, pool=pool, **kw),
+        )
+    raise ValueError(f"unknown FDB backend {backend!r}")

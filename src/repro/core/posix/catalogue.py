@@ -1,0 +1,188 @@
+"""POSIX Catalogue backend (paper §1.3).
+
+Write pathway (optimised to benefit writers):
+
+- each process buffers index entries privately per (dataset, collocation);
+- ``flush()`` writes them as a new **immutable index segment file**, fsyncs,
+  then publishes it by appending one fixed-format record to the dataset's
+  **table-of-contents (TOC)** file opened with ``O_APPEND`` — the "careful
+  insertion of entries on the end of a table of contents file, making use of
+  the precise semantics of the O_APPEND mode" that provides FDB
+  transactionality on POSIX.
+
+Read pathway (made *good enough* via preloading/caching/pruning):
+
+- readers tail the TOC incrementally (cached offset), discover segments,
+  and lazily load each segment with a single read (also why POSIX ``list``
+  is ~2x faster than DAOS — paper §5.3);
+- element lookups walk the segments of the matching collocation in reverse
+  publication order, so a re-archived field transactionally supersedes the
+  old one.
+
+Every TOC tail and cross-process segment/data read is accounted as the
+Lustre lock/MDS round-trips it would cost at scale (see stats.py).
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import uuid
+from typing import Iterable, Iterator, Mapping
+
+from ..catalogue import Catalogue, ListEntry
+from ..keys import Key, key_union
+from ..schema import Schema
+from ..store import FieldLocation
+from .stats import POSIX_STATS
+
+__all__ = ["PosixCatalogue"]
+
+_TOC = "toc"
+
+
+class PosixCatalogue(Catalogue):
+    def __init__(self, root: str, schema: Schema):
+        super().__init__(schema)
+        self._root = root
+        os.makedirs(root, exist_ok=True)
+        self._mu = threading.Lock()
+        self._pending: dict[tuple[str, str], dict[str, FieldLocation]] = {}
+        self._seq = 0
+        self._uid = f"{os.getpid()}.{uuid.uuid4().hex[:8]}"
+        # reader caches
+        self._toc_offset: dict[str, int] = {}
+        self._toc_records: dict[str, list[tuple[str, str]]] = {}  # dataset -> [(colloc_s, segpath)]
+        self._segments: dict[str, dict[str, bytes]] = {}  # segpath -> {el_s: raw location}
+
+    # --------------------------------------------------------------- writing
+    def archive(self, dataset_key: Key, collocation_key: Key, element_key: Key, location: FieldLocation) -> None:
+        k = (dataset_key.stringify(), collocation_key.stringify())
+        with self._mu:
+            self._pending.setdefault(k, {})[element_key.stringify()] = location
+
+    def flush(self) -> None:
+        with self._mu:
+            pending, self._pending = self._pending, {}
+        for (ds_s, co_s), entries in pending.items():
+            ddir = os.path.join(self._root, ds_s)
+            os.makedirs(ddir, exist_ok=True)
+            self._seq += 1
+            segname = f"{co_s}.{self._uid}.{self._seq}.index"
+            segpath = os.path.join(ddir, segname)
+            with open(segpath, "wb") as f:
+                POSIX_STATS.account("create_index_segment", mds=2)
+                payload = b"".join(
+                    el.encode() + b"\t" + loc.encode() + b"\n" for el, loc in entries.items()
+                )
+                f.write(payload)
+                f.flush()
+                os.fsync(f.fileno())
+                POSIX_STATS.account("write_index_segment", nbytes_w=len(payload), locks=1)
+            # publish: one-line record appended atomically via O_APPEND
+            record = f"idx {co_s} {segname}\n".encode()
+            fd = os.open(os.path.join(ddir, _TOC), os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+            try:
+                os.write(fd, record)
+                os.fsync(fd)
+            finally:
+                os.close(fd)
+            # the TOC append is the write-lock exchange every reader contends on
+            POSIX_STATS.account("toc_append", nbytes_w=len(record), locks=1, mds=1)
+
+    # --------------------------------------------------------------- reading
+    def _tail_toc(self, ds_s: str) -> list[tuple[str, str]]:
+        """Incrementally read new TOC records (cached offset per dataset)."""
+        tocpath = os.path.join(self._root, ds_s, _TOC)
+        records = self._toc_records.setdefault(ds_s, [])
+        try:
+            size = os.path.getsize(tocpath)
+        except FileNotFoundError:
+            return records
+        off = self._toc_offset.get(ds_s, 0)
+        if size > off:
+            with open(tocpath, "rb") as f:
+                f.seek(off)
+                data = f.read(size - off)
+            # only complete records (writer appends are record-atomic)
+            consumed = data.rfind(b"\n") + 1
+            for line in data[:consumed].splitlines():
+                parts = line.decode().split(" ", 2)
+                if len(parts) == 3 and parts[0] == "idx":
+                    records.append((parts[1], parts[2]))
+            self._toc_offset[ds_s] = off + consumed
+            # tailing a TOC being appended: conflicting read lock + stat
+            POSIX_STATS.account("toc_read", nbytes_r=consumed, locks=1, mds=1)
+        return records
+
+    def _load_segment(self, ds_s: str, segname: str) -> dict[str, bytes]:
+        segpath = os.path.join(self._root, ds_s, segname)
+        seg = self._segments.get(segpath)
+        if seg is None:
+            with open(segpath, "rb") as f:
+                raw = f.read()  # single read per segment file
+            POSIX_STATS.account("read_index_segment", nbytes_r=len(raw), locks=1, mds=1)
+            seg = {}
+            for line in raw.splitlines():
+                el, _, loc = line.partition(b"\t")
+                seg[el.decode()] = loc
+            self._segments[segpath] = seg
+        return seg
+
+    def retrieve(self, dataset_key: Key, collocation_key: Key, element_key: Key) -> FieldLocation | None:
+        ds_s = dataset_key.stringify()
+        co_s = collocation_key.stringify()
+        el_s = element_key.stringify()
+        records = self._tail_toc(ds_s)
+        # reverse publication order -> newest segment wins (replacement)
+        for rec_co, segname in reversed(records):
+            if rec_co != co_s:
+                continue
+            raw = self._load_segment(ds_s, segname).get(el_s)
+            if raw is not None:
+                return FieldLocation.decode(raw)
+        return None
+
+    def list(self, request: Mapping[str, Iterable[str] | str]) -> Iterator[ListEntry]:
+        ds_req, co_req, el_req = self.schema.request_levels(request)
+        try:
+            datasets = sorted(os.listdir(self._root))
+            POSIX_STATS.account("readdir", mds=1)
+        except FileNotFoundError:
+            return
+        for ds_s in datasets:
+            if not os.path.isdir(os.path.join(self._root, ds_s)):
+                continue
+            try:
+                dataset_key = self.schema.dataset_from_string(ds_s)
+            except ValueError:
+                continue
+            if not dataset_key.matches(ds_req):
+                continue
+            emitted: set[str] = set()
+            records = self._tail_toc(ds_s)
+            for co_s, segname in reversed(records):
+                colloc_key = self.schema.collocation_from_string(co_s)
+                if not colloc_key.matches(co_req):
+                    continue
+                seg = self._load_segment(ds_s, segname)
+                for el_s, raw in seg.items():
+                    full_id = f"{co_s}/{el_s}"
+                    if full_id in emitted:
+                        continue  # superseded by a newer segment
+                    element_key = self.schema.element_from_string(el_s)
+                    if not element_key.matches(el_req):
+                        continue
+                    emitted.add(full_id)
+                    yield ListEntry(
+                        key_union(dataset_key, colloc_key, element_key), FieldLocation.decode(raw)
+                    )
+
+    def wipe(self, dataset_key: Key) -> None:
+        import shutil
+
+        ds_s = dataset_key.stringify()
+        shutil.rmtree(os.path.join(self._root, ds_s), ignore_errors=True)
+        self._toc_offset.pop(ds_s, None)
+        self._toc_records.pop(ds_s, None)
+        POSIX_STATS.account("wipe", mds=1)

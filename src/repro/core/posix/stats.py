@@ -1,0 +1,60 @@
+"""Accounting for the POSIX backend's file-system operations.
+
+On a real Lustre deployment every conflicting write/read implies LDLM lock
+round-trips between clients and lock servers, and every open/stat implies
+MDS round-trips (paper §1: "distributed locking mechanisms need to be put in
+place ... causing large lock communication overheads on the client nodes").
+A local filesystem has none of those costs, so the backend *counts* the
+operations that would incur them; the benchmark cost model
+(:mod:`repro.core.costmodel`) converts counts into simulated time at scale.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import Counter
+from dataclasses import dataclass, field
+
+__all__ = ["PosixStats", "POSIX_STATS"]
+
+
+@dataclass
+class PosixStats:
+    ops: Counter = field(default_factory=Counter)
+    bytes_written: int = 0
+    bytes_read: int = 0
+    # extent-lock acquisitions that a Lustre client would have needed
+    lock_acquisitions: int = 0
+    # metadata-server round-trips (open/create/stat/readdir)
+    mds_ops: int = 0
+    _mu: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def account(self, op: str, *, nbytes_w: int = 0, nbytes_r: int = 0, locks: int = 0, mds: int = 0) -> None:
+        with self._mu:
+            self.ops[op] += 1
+            self.bytes_written += nbytes_w
+            self.bytes_read += nbytes_r
+            self.lock_acquisitions += locks
+            self.mds_ops += mds
+
+    def snapshot(self) -> dict:
+        with self._mu:
+            return {
+                "ops": dict(self.ops),
+                "bytes_written": self.bytes_written,
+                "bytes_read": self.bytes_read,
+                "lock_acquisitions": self.lock_acquisitions,
+                "mds_ops": self.mds_ops,
+            }
+
+    def reset(self) -> None:
+        with self._mu:
+            self.ops.clear()
+            self.bytes_written = 0
+            self.bytes_read = 0
+            self.lock_acquisitions = 0
+            self.mds_ops = 0
+
+
+#: process-global stats instance (one "client" per process)
+POSIX_STATS = PosixStats()

@@ -1,0 +1,65 @@
+"""Abstract Store backend interface (paper §3.1.1).
+
+A Store backend implements bulk write/read of field data:
+
+- ``archive(data, dataset_key, collocation_key) -> FieldLocation`` — takes
+  control of the data (optionally persisting it) and returns a unique
+  location descriptor.  Must never overwrite a previously archived field.
+- ``flush()`` — blocks until everything archived by this process is persisted
+  and accessible to external readers.
+- ``retrieve(location) -> DataHandle`` — backend-agnostic reader.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+
+from .datahandle import DataHandle
+from .keys import Key
+
+__all__ = ["FieldLocation", "Store"]
+
+
+@dataclass(frozen=True)
+class FieldLocation:
+    """URI-equivalent descriptor of where a field's bytes live.
+
+    ``scheme`` identifies the backend ('daos' | 'posix'); ``uri`` is
+    backend-specific (container/OID or file path); offset/length delimit the
+    field so reads need no size round-trip (paper §3.1.2: "no call needs to
+    be made to DAOS ... to obtain the array size, as that is encoded in the
+    field location descriptor").
+    """
+
+    scheme: str
+    uri: str
+    offset: int
+    length: int
+
+    def encode(self) -> bytes:
+        return f"{self.scheme}|{self.uri}|{self.offset}|{self.length}".encode()
+
+    @classmethod
+    def decode(cls, raw: bytes) -> "FieldLocation":
+        scheme, uri, off, ln = raw.decode().split("|")
+        return cls(scheme, uri, int(off), int(ln))
+
+
+class Store(abc.ABC):
+    scheme: str
+
+    @abc.abstractmethod
+    def archive(self, data: bytes, dataset_key: Key, collocation_key: Key) -> FieldLocation:
+        ...
+
+    @abc.abstractmethod
+    def flush(self) -> None:
+        ...
+
+    @abc.abstractmethod
+    def retrieve(self, location: FieldLocation) -> DataHandle:
+        ...
+
+    def close(self) -> None:  # release cached handles
+        pass

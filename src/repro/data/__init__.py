@@ -1,0 +1,3 @@
+from .pipeline import PrefetchPipeline, SyntheticLM
+
+__all__ = ["PrefetchPipeline", "SyntheticLM"]

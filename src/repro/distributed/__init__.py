@@ -1,0 +1,3 @@
+from .sharding import AxisRules, axis_rules, constrain, current_rules, logical_to_spec, make_rules
+
+__all__ = ["AxisRules", "axis_rules", "constrain", "current_rules", "logical_to_spec", "make_rules"]

@@ -1,0 +1,129 @@
+"""Logical-axis sharding: MaxText-style name indirection.
+
+Model code annotates tensors/params with *logical* axis names
+("batch", "vocab", "heads", "d_ff", "experts", …); a :class:`AxisRules`
+mapping — computed per (config, mesh) with divisibility fallbacks — resolves
+them to physical mesh axes.  ``constrain`` applies
+``with_sharding_constraint`` only when a rules context is active, so the
+same model code runs unsharded on CPU tests and sharded under pjit.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AxisRules", "axis_rules", "constrain", "logical_to_spec", "current_rules"]
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """logical name -> physical mesh axis (or tuple of axes, or None)."""
+
+    rules: dict[str, tuple[str, ...] | str | None]
+    mesh: Mesh | None = None
+
+    def spec(self, *logical: str | None) -> P:
+        parts = []
+        for name in logical:
+            if name is None:
+                parts.append(None)
+            else:
+                parts.append(self.rules.get(name))
+        return P(*parts)
+
+    def sharding(self, *logical: str | None) -> NamedSharding:
+        if self.mesh is None:
+            raise ValueError("AxisRules has no mesh bound")
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+_state = threading.local()
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def axis_rules(rules: AxisRules):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Apply a logical sharding constraint if rules are active (else no-op)."""
+    r = current_rules()
+    if r is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"constrain: rank {x.ndim} != {len(logical)} logical names")
+    return jax.lax.with_sharding_constraint(x, r.spec(*logical))
+
+
+def logical_to_spec(axes_tree, rules: AxisRules):
+    """Map a pytree of logical-name tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: rules.spec(*axes),
+        axes_tree,
+        is_leaf=lambda v: isinstance(v, tuple),
+    )
+
+
+def make_rules(cfg, mesh: Mesh | None, *, model_axis: str = "model", batch_axes: tuple[str, ...] = ("data",)) -> AxisRules:
+    """Divisibility-driven rules for a ModelConfig on a mesh.
+
+    - heads/d_ff/vocab shard over `model` when divisible, else replicate;
+    - kv heads usually < model size -> replicated (GQA groups local);
+    - experts shard over `model` when divisible (EP), else expert-FFN width;
+    - batch over (pod, data).
+    """
+    if mesh is None:
+        msize = 1
+    else:
+        msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get(model_axis, 1)
+
+    def div(n: int):
+        return model_axis if (msize > 1 and n % msize == 0) else None
+
+    hd = cfg.resolved_head_dim
+    rules: dict[str, tuple[str, ...] | str | None] = {
+        "batch": batch_axes if len(batch_axes) > 1 else batch_axes[0],
+        "seq": None,
+        "d_model": None,
+        "heads": div(cfg.n_heads) if cfg.n_heads else None,
+        "kv_heads": div(cfg.n_kv_heads) if cfg.n_kv_heads else None,
+        "head_dim": None,
+        "d_ff": div(cfg.d_ff) if cfg.d_ff else None,
+        "vocab": div(cfg.padded_vocab),
+        "layers": None,
+        "ssm_inner": div(cfg.d_inner) if cfg.ssm.enabled else None,
+        "ssm_state": None,
+        "ssm_heads": div(cfg.ssm_heads) if cfg.ssm.enabled else None,
+        "conv_width": None,
+        # SP: the residual stream's sequence dim lives sharded on the model
+        # axis between blocks (reduce-scatter replaces all-reduce)
+        "seq_sp": model_axis if (cfg.seq_shard and msize > 1) else None,
+    }
+    if cfg.moe.enabled:
+        if cfg.moe_force_ep and msize > 1 and cfg.moe.e_total % msize == 0:
+            rules["experts"] = model_axis       # EP over padded expert slots
+            rules["d_expert"] = None
+        elif cfg.moe.e_total % msize == 0 and msize > 1:
+            rules["experts"] = model_axis       # expert parallelism
+            rules["d_expert"] = None
+        else:
+            rules["experts"] = None             # replicate experts,
+            rules["d_expert"] = div(cfg.moe.d_expert)  # TP inside each expert
+    else:
+        rules["experts"] = None
+        rules["d_expert"] = None
+    return AxisRules(rules=rules, mesh=mesh)

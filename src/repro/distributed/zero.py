@@ -1,0 +1,44 @@
+"""ZeRO-1: shard optimizer state over the data axis on top of TP sharding.
+
+For each parameter's PartitionSpec we add the `data` axis to the first
+dimension that is (a) not already sharded and (b) divisible by the data-axis
+size.  XLA then keeps master/m/v distributed and the update step runs on
+1/data_size of the elements per device, with the reduce-scatter/all-gather
+pair inserted automatically by GSPMD.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["zero_shard_spec", "zero_shard_tree"]
+
+
+def zero_shard_spec(spec: P, shape: tuple[int, ...], mesh: Mesh, axis: str = "data") -> P:
+    if axis not in mesh.axis_names:
+        return spec
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    if axis_size == 1:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, cur) in enumerate(zip(shape, parts)):
+        if cur is None and dim % axis_size == 0 and dim >= axis_size:
+            parts[i] = axis
+            return P(*parts)
+        if cur is not None and not isinstance(cur, tuple) and cur != axis:
+            # try composing with the existing axis on this dim
+            existing = dict(zip(mesh.axis_names, mesh.devices.shape))[cur]
+            if dim % (existing * axis_size) == 0:
+                parts[i] = (cur, axis)
+                return P(*parts)
+    return spec
+
+
+def zero_shard_tree(spec_tree, shape_tree, mesh: Mesh, axis: str = "data"):
+    return jax.tree.map(
+        lambda s, shp: zero_shard_spec(s, shp.shape, mesh, axis),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda v: isinstance(v, P),
+    )

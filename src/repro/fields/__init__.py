@@ -1,0 +1,3 @@
+from .synthetic import FIELD_BASE, synthetic_field
+
+__all__ = ["FIELD_BASE", "synthetic_field"]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+- flash_attention: tiled online-softmax attention (causal/bidir, GQA)
+- ssd_scan: Mamba2 SSD chunked scan (intra-chunk quadratic + carried state)
+- grib_pack: GRIB-style simple-packing field codec (the NWP I/O-plane hotspot)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with backend dispatch) and ref.py (pure-jnp oracle used in tests).
+"""

@@ -1,0 +1,52 @@
+"""jit'd public wrapper: GQA flash attention with automatic backend dispatch.
+
+On TPU the Pallas kernel runs natively; elsewhere (CPU CI, dry-run) it runs
+in interpret mode when explicitly requested, and model code defaults to the
+XLA paths (``attn_impl='naive'|'chunked'``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_call
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "q_offset", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,  # (B, Sq, K, G, d)
+    k: jax.Array,  # (B, Sk, K, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _use_interpret()
+    b, sq, kh, g, d = q.shape
+    _, sk, _, _ = k.shape
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(b * kh * g, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kh, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kh, sk, d)
+    out = flash_attention_call(
+        qf, kf, vf, groups=g, causal=causal, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.reshape(b, kh, g, sq, d).transpose(0, 3, 1, 2, 4)
+
+
+def flash_attention_reference(q, k, v, *, causal=True, q_offset=0):
+    return attention_ref(q, k, v, causal=causal, q_offset=q_offset)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, K, G, d)
+    k: jax.Array,  # (B, Sk, K, d)
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: int = 0,
+) -> jax.Array:
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qi = jnp.arange(sq)[:, None] + q_offset
+        kj = jnp.arange(sk)[None, :]
+        s = jnp.where(kj <= qi, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)

@@ -1,0 +1,4 @@
+from . import ops, ref
+from .ops import grib_pack, grib_unpack, pack_to_bytes, unpack_from_bytes
+
+__all__ = ["ops", "ref", "grib_pack", "grib_unpack", "pack_to_bytes", "unpack_from_bytes"]

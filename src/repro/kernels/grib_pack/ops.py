@@ -1,0 +1,53 @@
+"""jit'd public wrapper: device-side GRIB simple packing for FDB archive."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import grib_pack_call, grib_unpack_call
+from .ref import field_stats
+
+__all__ = ["grib_pack", "grib_unpack", "pack_to_bytes", "unpack_from_bytes"]
+
+
+@partial(jax.jit, static_argnames=("nbits", "interpret"))
+def grib_pack(x: jax.Array, *, nbits: int = 16, interpret: bool | None = None):
+    """x: (F, H, W) float -> (codes (F,H,W) int32, ref (F,), scale (F,))."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    ref, scale, inv_scale = field_stats(x, nbits)
+    codes = grib_pack_call(
+        x, ref[:, None], inv_scale[:, None], nbits=nbits, interpret=interpret
+    )
+    return codes, ref, scale
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def grib_unpack(codes: jax.Array, ref: jax.Array, scale: jax.Array, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return grib_unpack_call(codes, ref[:, None], scale[:, None], interpret=interpret)
+
+
+def pack_to_bytes(x: np.ndarray, nbits: int = 16) -> tuple[bytes, dict]:
+    """Host-side convenience: one field (H, W) -> GRIB-ish byte payload."""
+    codes, ref, scale = grib_pack(jnp.asarray(x)[None])
+    arr = np.asarray(codes[0], dtype=np.uint32).astype(np.uint16)
+    meta = {
+        "ref": float(ref[0]),
+        "scale": float(scale[0]),
+        "shape": list(x.shape),
+        "nbits": nbits,
+    }
+    return arr.tobytes(), meta
+
+
+def unpack_from_bytes(payload: bytes, meta: dict) -> np.ndarray:
+    h, w = meta["shape"]
+    codes = np.frombuffer(payload, dtype=np.uint16).reshape(h, w).astype(np.int32)
+    out = grib_unpack(jnp.asarray(codes)[None], jnp.asarray([meta["ref"]]), jnp.asarray([meta["scale"]]))
+    return np.asarray(out[0])

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for GRIB simple packing."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pack_ref", "unpack_ref", "field_stats"]
+
+
+def field_stats(x: jax.Array, nbits: int = 16):
+    """Per-field (ref, scale, inv_scale). x: (F, H, W)."""
+    lo = x.min(axis=(1, 2))
+    hi = x.max(axis=(1, 2))
+    maxcode = (1 << nbits) - 1
+    scale = jnp.maximum(hi - lo, 1e-30) / maxcode
+    return lo, scale, 1.0 / scale
+
+
+def pack_ref(x: jax.Array, ref: jax.Array, inv_scale: jax.Array, nbits: int = 16) -> jax.Array:
+    maxcode = (1 << nbits) - 1
+    code = jnp.round((x.astype(jnp.float32) - ref[:, None, None]) * inv_scale[:, None, None])
+    return jnp.clip(code, 0, maxcode).astype(jnp.int32)
+
+
+def unpack_ref(codes: jax.Array, ref: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale[:, None, None] + ref[:, None, None]

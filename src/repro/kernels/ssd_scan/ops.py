@@ -1,0 +1,37 @@
+"""jit'd public wrapper for the SSD scan kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_call
+
+__all__ = ["ssd_scan"]
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,   # (H,)
+    B_: jax.Array,  # (B, S, N)
+    C_: jax.Array,  # (B, S, N)
+    D_: jax.Array,  # (H,)
+    *,
+    chunk: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, h, p = x.shape
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, s)
+    af = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h, 1)
+    df = jnp.broadcast_to(D_[None, :], (b, h)).reshape(b * h, 1)
+    out = ssd_scan_call(
+        xf, dtf, af, B_, C_, df, heads=h, chunk=chunk, interpret=interpret
+    )
+    return out.reshape(b, h, s, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the SSD scan kernel.
+
+``ssd_sequential_ref`` is the direct O(S) recurrence — the ground truth.
+``ssd_chunked`` in repro.models.ssm is the chunked jnp implementation; both
+must agree with the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_sequential_ref"]
+
+
+def ssd_sequential_ref(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,   # (H,)
+    B_: jax.Array,  # (B, S, N)
+    C_: jax.Array,  # (B, S, N)
+    D_: jax.Array,  # (H,)
+) -> jax.Array:
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * A)  # (B,H)
+        hstate = decay[..., None, None] * hstate + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, bt
+        )
+        yt = jnp.einsum("bhpn,bn->bhp", hstate, ct)
+        return hstate, yt
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        B_.transpose(1, 0, 2).astype(jnp.float32),
+        C_.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3)  # (B,S,H,P)
+    return (y + x.astype(jnp.float32) * D_[None, None, :, None]).astype(x.dtype)

@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=512"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract memory/cost/collective analyses.
+
+MUST be run as its own process (the XLA_FLAGS above are read at first jax
+initialisation).  The sweep runner (--all) therefore re-invokes this module
+one subprocess per cell and aggregates JSON artifacts under
+``artifacts/dryrun/``.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-34b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def _skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "pure full-attention arch: no sub-quadratic path for a 512k "
+            "context (see DESIGN.md §shape-cell applicability)"
+        )
+    return None
+
+
+def _parse_overrides(pairs) -> dict:
+    out = {}
+    for kv in pairs or []:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str, attn_impl: str | None = None,
+             overrides: dict | None = None, tag: str | None = None) -> dict:
+    import jax
+
+    from repro.configs import SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.roofline.analysis import model_flops_for, parse_collectives, roofline
+
+    cfg = get_config(arch)
+    import dataclasses
+
+    if attn_impl:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    hp = None
+    if overrides:
+        moe_over = {k[4:]: v for k, v in overrides.items() if k.startswith("moe.")}
+        flat = {k: v for k, v in overrides.items() if not k.startswith("moe.")}
+        if "grad_accum" in flat:
+            from repro.configs import TrainConfig
+
+            hp = TrainConfig(grad_accum=flat.pop("grad_accum"))
+        if moe_over:
+            flat["moe"] = dataclasses.replace(cfg.moe, **moe_over)
+        cfg = dataclasses.replace(cfg, **flat)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    if attn_impl:
+        cell_id += f"__{attn_impl}"
+    if tag:
+        cell_id += f"__{tag}"
+
+    reason = _skip_reason(cfg, shape)
+    if reason:
+        rec = {"cell": cell_id, "status": "skipped", "reason": reason}
+        _write(out_dir, cell_id, rec)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, in_shardings, out_shardings, donate = build_cell(cfg, mesh, shape, hp=hp)
+    with mesh:
+        jitted = jax.jit(
+            fn,
+            in_shardings=in_shardings,
+            out_shardings=out_shardings,
+            donate_argnums=donate,
+        )
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    print(f"[{cell_id}] memory_analysis:", mem)  # proves it fits
+    print(f"[{cell_id}] cost_analysis: flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e}")
+
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    # trip-count-exact correction: lax.scan bodies are counted once by XLA
+    # cost analysis; probe unrolled 1x/2x-layer variants and rescale
+    # (see repro/roofline/probes.py).
+    from repro.roofline.probes import probe_corrected_costs
+
+    probes = probe_corrected_costs(cfg, mesh, shape, hp=hp)
+    cost_c = {"flops": probes["flops"], "bytes accessed": probes["bytes"]}
+    coll_c = {
+        "total_bytes": probes["coll_total"],
+        "bytes_by_op": {
+            op: probes[f"coll_{op}"]
+            for op in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+        },
+        "counts": coll.get("counts", {}),
+    }
+    rep = roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=mesh.devices.size,
+        cost=cost_c, collectives=coll_c, model_flops=model_flops_for(cfg, shape),
+    )
+    rec = {
+        "cell": cell_id,
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "attn_impl": attn_impl or cfg.attn_impl,
+        "chips": int(mesh.devices.size),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost_raw_scanned": {k: cost[k] for k in ("flops", "bytes accessed") if k in cost},
+        "cost": cost_c,
+        "collectives_raw_scanned": coll,
+        "probes": {k: v for k, v in probes.items() if k != "probe_raw"},
+        "roofline": rep.as_dict(),
+    }
+    _write(out_dir, cell_id, rec)
+    return rec
+
+
+def _write(out_dir: str, cell_id: str, rec: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{cell_id}.json"), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def _sweep(args) -> int:
+    """Run every cell in its own subprocess (isolated jax runtime)."""
+    from repro.configs import ASSIGNED, SHAPES
+
+    cells = [
+        (arch, shape)
+        for arch in (args.archs or ASSIGNED)
+        for shape in (args.shapes or list(SHAPES))
+    ]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for multi in meshes:
+        for arch, shape in cells:
+            mesh_name = "pod2x16x16" if multi else "pod16x16"
+            cell_id = f"{arch}__{shape}__{mesh_name}"
+            path = os.path.join(args.out, f"{cell_id}.json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip existing] {cell_id}")
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape, "--out", args.out,
+            ]
+            if multi:
+                cmd.append("--multi-pod")
+            if args.attn_impl:
+                cmd += ["--attn-impl", args.attn_impl]
+            env = dict(os.environ)
+            env["REPRO_XLA_FLAGS"] = (
+                f"--xla_force_host_platform_device_count={512 if multi else 256}"
+            )
+            print(f"=== {cell_id} ===", flush=True)
+            r = subprocess.run(cmd, env=env, timeout=args.timeout)
+            if r.returncode != 0:
+                failures += 1
+                _write(args.out, cell_id, {"cell": cell_id, "status": "failed", "rc": r.returncode})
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--archs", nargs="*")
+    ap.add_argument("--shapes", nargs="*")
+    ap.add_argument("--attn-impl", default=None)
+    ap.add_argument("--override", action="append", default=None,
+                    help="ModelConfig field override, e.g. --override seq_shard=true")
+    ap.add_argument("--tag", default=None, help="artifact suffix for perf variants")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    if args.all or args.archs or args.shapes:
+        sys.exit(_sweep(args))
+
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.out, args.attn_impl,
+                       overrides=_parse_overrides(args.override), tag=args.tag)
+        print(json.dumps({k: v for k, v in rec.items() if k != "roofline"}, default=str))
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

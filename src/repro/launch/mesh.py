@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  Single pod: 16×16 = 256 chips (data, model).  Multi-pod: 2×16×16 =
+512 chips (pod, data, model) — the `pod` axis is the slowest (DCN-ish)
+dimension and carries only data parallelism + gradient reduction.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_debug_mesh", "mesh_axis_sizes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Small mesh over however many devices the process actually has."""
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

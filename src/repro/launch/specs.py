@@ -1,0 +1,163 @@
+"""ShapeDtypeStruct input stand-ins + sharding specs for every
+(arch × shape × mesh) cell — the dry-run's contract.
+
+Nothing here allocates device memory: inputs are ShapeDtypeStructs, and
+params/opt/cache abstracts come from eval_shape/abstract_params.
+
+Sharding policy (see DESIGN.md §4):
+- batch over (pod, data) when divisible, else data, else replicated;
+- KV cache: heads over `model` when kv_heads divides, OTHERWISE the cache
+  length dim over `model` (distributed flash-decoding) when it divides —
+  this is what keeps 32k caches of kv=8 archs on-chip at batch 128;
+- optimizer state additionally ZeRO-1-sharded over `data`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import AxisRules, logical_to_spec, make_rules
+from repro.distributed.zero import zero_shard_tree
+from repro.models import abstract_params, init_cache, logical_axes
+from repro.training.optimizer import abstract_opt_state
+
+__all__ = [
+    "batch_partition",
+    "rules_for",
+    "param_specs",
+    "opt_specs",
+    "train_batch_abstract",
+    "cache_abstract",
+    "cache_spec_tree",
+    "ns",
+]
+
+
+def mesh_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_partition(mesh: Mesh, batch: int):
+    sizes = mesh_sizes(mesh)
+    axes = tuple(a for a in ("pod", "data") if a in sizes)
+    total = 1
+    for a in axes:
+        total *= sizes[a]
+    if axes and batch % total == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if "data" in sizes and batch % sizes["data"] == 0:
+        return "data"
+    return None
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh) -> AxisRules:
+    sizes = mesh_sizes(mesh)
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    return make_rules(cfg, mesh, batch_axes=batch_axes or ("data",))
+
+
+def ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, rules: AxisRules):
+    return logical_to_spec(logical_axes(cfg), rules)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh, rules: AxisRules, *, zero1: bool = True):
+    from repro.training.optimizer import OptState
+
+    pspecs = param_specs(cfg, mesh, rules)
+    pabs = abstract_params(cfg)
+    if zero1:
+        zspecs = zero_shard_tree(pspecs, pabs, mesh, axis="data")
+    else:
+        zspecs = pspecs
+    return OptState(master=zspecs, m=zspecs, v=zspecs, step=P())
+
+
+# ------------------------------------------------------------------- batches
+def train_batch_abstract(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    b, s = shape.global_batch, shape.seq_len
+    bp = batch_partition(mesh, b)
+    batch: dict = {"targets": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    specs: dict = {"targets": P(bp, None)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        specs["frames"] = P(bp, None, None)
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["tokens"] = P(bp, None)
+    elif cfg.input_kind == "patches":
+        batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        specs["embeds"] = P(bp, None, None)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["tokens"] = P(bp, None)
+    return batch, specs
+
+
+def prefill_inputs_abstract(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    b, s = shape.global_batch, shape.seq_len
+    bp = batch_partition(mesh, b)
+    if cfg.input_kind == "patches":
+        inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        spec = P(bp, None, None)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        spec = P(bp, None)
+    extras = {}
+    espec = {}
+    if cfg.is_encoder_decoder:
+        extras["enc_frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        espec["enc_frames"] = P(bp, None, None)
+    return inputs, spec, extras, espec
+
+
+# -------------------------------------------------------------------- caches
+def cache_abstract(cfg: ModelConfig, batch: int, cache_len: int, enc_len: int = 0):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, cache_len, enc_len=enc_len)
+    )
+
+
+def cache_spec_tree(cfg: ModelConfig, mesh: Mesh, cache_abs: dict) -> dict:
+    sizes = mesh_sizes(mesh)
+    msize = sizes.get("model", 1)
+    specs: dict = {}
+    for name, leaf in cache_abs.items():
+        shp = leaf.shape
+        if name == "pos":
+            specs[name] = P()
+        elif name in ("k", "v", "xk", "xv", "shared_k", "shared_v"):
+            # (L/sites, B, T, K, hd)
+            bp = batch_partition(mesh, shp[1])
+            kv = shp[3]
+            t = shp[2]
+            dsize = sizes.get("data", 1)
+            # when the batch cannot use the data axis (e.g. long_500k B=1),
+            # shard the cache LENGTH over it — distributed flash-decoding —
+            # otherwise GSPMD keeps 16 replicas consistent with huge ARs
+            t_ax = "data" if (bp is None and dsize > 1 and t % dsize == 0) else None
+            if msize > 1 and kv % msize == 0:
+                specs[name] = P(None, bp, t_ax, "model", None)
+            elif msize > 1 and t % msize == 0:
+                tm = ("data", "model") if t_ax else "model"
+                specs[name] = P(None, bp, tm, None, None)  # flash-decoding split
+            else:
+                specs[name] = P(None, bp, t_ax, None, None)
+        elif name == "conv":
+            bp = batch_partition(mesh, shp[1])
+            specs[name] = P(None, bp, None, None)
+        elif name == "ssm":
+            bp = batch_partition(mesh, shp[1])
+            h = shp[2]
+            specs[name] = P(None, bp, "model" if msize > 1 and h % msize == 0 else None, None, None)
+        elif name == "x0":
+            bp = batch_partition(mesh, shp[0])
+            specs[name] = P(bp, None, None)
+        else:
+            specs[name] = P(*([None] * len(shp)))
+    return specs

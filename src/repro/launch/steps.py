@@ -1,0 +1,141 @@
+"""Step builders: train_step / serve_prefill / serve_step as jit-able pure
+functions, with their sharding contracts.
+
+Each builder returns ``(fn, args_abstract, in_shardings, donate_argnums)``
+ready for ``jax.jit(...).lower(*args).compile()`` — the dry-run path — and
+equally runnable with concrete arrays (the CPU end-to-end examples use the
+same builders on a 1×1 mesh).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import axis_rules
+from repro.models import abstract_params, decode_step, prefill, train_loss
+from repro.training.optimizer import abstract_opt_state, adamw_step
+from . import specs as S
+
+__all__ = ["build_train_step", "build_prefill", "build_decode", "build_cell"]
+
+
+def build_train_step(cfg: ModelConfig, hp: TrainConfig, mesh: Mesh, shape: ShapeConfig):
+    rules = S.rules_for(cfg, mesh)
+
+    accum = max(1, hp.grad_accum)
+
+    def train_step(params, opt, batch):
+        with axis_rules(rules):
+            if accum == 1:
+                def loss_fn(p):
+                    loss, metrics = train_loss(p, cfg, batch)
+                    return loss, metrics
+
+                (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            else:
+                # sequential microbatching: peak activation memory scales
+                # with B/accum; grads accumulate in param dtype (bf16 wire)
+                micro = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch
+                )
+                grads = None
+                loss = 0.0
+                metrics = None
+                for i in range(accum):  # Python-unrolled: cost-analysis exact
+                    mb = jax.tree.map(lambda x: x[i], micro)
+
+                    def loss_fn(p):
+                        l, m = train_loss(p, cfg, mb)  # noqa: B023
+                        return l, m
+
+                    (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+                    grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
+                    loss = loss + l / accum
+                    metrics = m
+                grads = jax.tree.map(lambda g: g / accum, grads)
+            new_params, new_opt, om = adamw_step(grads, params, opt, hp)
+        return new_params, new_opt, {"loss": loss, **metrics, **om}
+
+    pabs = abstract_params(cfg)
+    oabs = abstract_opt_state(pabs)
+    batch_abs, batch_specs = S.train_batch_abstract(cfg, shape, mesh)
+    pspecs = S.param_specs(cfg, mesh, rules)
+    ospecs = S.opt_specs(cfg, mesh, rules, zero1=hp.zero1)
+    in_shardings = (
+        jax.tree.map(lambda s: S.ns(mesh, s), pspecs, is_leaf=lambda v: isinstance(v, P)),
+        jax.tree.map(lambda s: S.ns(mesh, s), ospecs, is_leaf=lambda v: isinstance(v, P)),
+        jax.tree.map(lambda s: S.ns(mesh, s), batch_specs, is_leaf=lambda v: isinstance(v, P)),
+    )
+    out_shardings = (in_shardings[0], in_shardings[1], S.ns(mesh, P()))
+    args = (pabs, oabs, batch_abs)
+    return train_step, args, in_shardings, out_shardings, (0, 1)
+
+
+def build_prefill(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    rules = S.rules_for(cfg, mesh)
+    b, s = shape.global_batch, shape.seq_len
+    inputs_abs, in_spec, extras, espec = S.prefill_inputs_abstract(cfg, shape, mesh)
+    cache_abs = S.cache_abstract(cfg, b, cache_len=s, enc_len=s if cfg.is_encoder_decoder else 0)
+    cspecs = S.cache_spec_tree(cfg, mesh, cache_abs)
+
+    if cfg.is_encoder_decoder:
+        def serve_prefill(params, inputs, cache, enc_frames):
+            with axis_rules(rules):
+                return prefill(params, cfg, inputs, cache, enc_frames=enc_frames)
+    else:
+        def serve_prefill(params, inputs, cache):
+            with axis_rules(rules):
+                return prefill(params, cfg, inputs, cache)
+
+    pabs = abstract_params(cfg)
+    pspecs = S.param_specs(cfg, mesh, rules)
+    nsp = lambda t: jax.tree.map(lambda x: S.ns(mesh, x), t, is_leaf=lambda v: isinstance(v, P))
+    in_shardings = [nsp(pspecs), S.ns(mesh, in_spec), nsp(cspecs)]
+    args = [pabs, inputs_abs, cache_abs]
+    if cfg.is_encoder_decoder:
+        in_shardings.append(S.ns(mesh, espec["enc_frames"]))
+        args.append(extras["enc_frames"])
+    bp = S.batch_partition(mesh, b)
+    out_shardings = (S.ns(mesh, P(bp, "model" if S.mesh_sizes(mesh).get("model", 1) > 1 else None)), nsp(cspecs))
+    return serve_prefill, tuple(args), tuple(in_shardings), out_shardings, (2,)
+
+
+def build_decode(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    rules = S.rules_for(cfg, mesh)
+    b, s = shape.global_batch, shape.seq_len
+    cache_abs = S.cache_abstract(cfg, b, cache_len=s, enc_len=s if cfg.is_encoder_decoder else 0)
+    cspecs = S.cache_spec_tree(cfg, mesh, cache_abs)
+
+    def serve_step(params, token, cache):
+        with axis_rules(rules):
+            return decode_step(params, cfg, token, cache)
+
+    pabs = abstract_params(cfg)
+    pspecs = S.param_specs(cfg, mesh, rules)
+    nsp = lambda t: jax.tree.map(lambda x: S.ns(mesh, x), t, is_leaf=lambda v: isinstance(v, P))
+    bp = S.batch_partition(mesh, b)
+    token_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    in_shardings = (nsp(pspecs), S.ns(mesh, P(bp, None)), nsp(cspecs))
+    out_shardings = (
+        S.ns(mesh, P(bp, "model" if S.mesh_sizes(mesh).get("model", 1) > 1 else None)),
+        nsp(cspecs),
+    )
+    args = (pabs, token_abs, cache_abs)
+    return serve_step, args, in_shardings, out_shardings, (2,)
+
+
+def build_cell(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, hp: TrainConfig | None = None):
+    """Dispatch on the shape kind."""
+    if shape.kind == "train":
+        return build_train_step(cfg, hp or TrainConfig(), mesh, shape)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, mesh, shape)
+    if shape.kind == "decode":
+        return build_decode(cfg, mesh, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,25 @@
+from .model import (
+    abstract_params,
+    decode_step,
+    encode,
+    forward_hidden,
+    init_cache,
+    init_params,
+    lm_logits,
+    logical_axes,
+    prefill,
+    train_loss,
+)
+
+__all__ = [
+    "abstract_params",
+    "decode_step",
+    "encode",
+    "forward_hidden",
+    "init_cache",
+    "init_params",
+    "lm_logits",
+    "logical_axes",
+    "prefill",
+    "train_loss",
+]

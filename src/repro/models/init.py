@@ -1,0 +1,285 @@
+"""Parameter initialization + logical-axis annotation.
+
+``init_params(cfg, key)`` returns the parameter pytree (layer-stacked for
+``lax.scan``); ``logical_axes(cfg)`` returns a matching pytree of logical
+axis-name tuples consumed by :mod:`repro.distributed.sharding`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["init_params", "logical_axes", "abstract_params"]
+
+
+def _dense(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def _attn_shapes(cfg: ModelConfig, width_in: int) -> dict[str, tuple]:
+    hd = cfg.resolved_head_dim
+    s: dict[str, tuple] = {
+        "attn_norm": (width_in,),
+        "wq": (width_in, cfg.n_heads, hd),
+        "wk": (width_in, cfg.n_kv_heads, hd),
+        "wv": (width_in, cfg.n_kv_heads, hd),
+        "wo": (cfg.n_heads, hd, cfg.d_model),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = (cfg.n_heads, hd)
+        s["bk"] = (cfg.n_kv_heads, hd)
+        s["bv"] = (cfg.n_kv_heads, hd)
+    return s
+
+
+_ATTN_AXES = {
+    "attn_norm": ("d_model",),
+    "wq": ("d_model", "heads", "head_dim"),
+    "wk": ("d_model", "kv_heads", "head_dim"),
+    "wv": ("d_model", "kv_heads", "head_dim"),
+    "wo": ("heads", "head_dim", "d_model"),
+    "bq": ("heads", "head_dim"),
+    "bk": ("kv_heads", "head_dim"),
+    "bv": ("kv_heads", "head_dim"),
+}
+
+
+def _ffn_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    return {
+        "ffn_norm": (cfg.d_model,),
+        "w_gate": (cfg.d_model, cfg.d_ff),
+        "w_up": (cfg.d_model, cfg.d_ff),
+        "w_down": (cfg.d_ff, cfg.d_model),
+    }
+
+
+_FFN_AXES = {
+    "ffn_norm": ("d_model",),
+    "w_gate": ("d_model", "d_ff"),
+    "w_up": ("d_model", "d_ff"),
+    "w_down": ("d_ff", "d_model"),
+}
+
+
+def _moe_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    m = cfg.moe
+    e = m.e_total  # padded slots are router-masked (never routed to)
+    return {
+        "ffn_norm": (cfg.d_model,),
+        "router": (cfg.d_model, e),
+        "w_gate": (e, cfg.d_model, m.d_expert),
+        "w_up": (e, cfg.d_model, m.d_expert),
+        "w_down": (e, m.d_expert, cfg.d_model),
+    }
+
+
+_MOE_AXES = {
+    "ffn_norm": ("d_model",),
+    "router": ("d_model", "experts"),
+    "w_gate": ("experts", "d_model", "d_expert"),
+    "w_up": ("experts", "d_model", "d_expert"),
+    "w_down": ("experts", "d_expert", "d_model"),
+}
+
+
+def _ssm_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    di, n, h, k = cfg.d_inner, cfg.ssm.d_state, cfg.ssm_heads, cfg.ssm.d_conv
+    return {
+        "norm_in": (cfg.d_model,),
+        "w_z": (cfg.d_model, di),
+        "w_x": (cfg.d_model, di),
+        "w_B": (cfg.d_model, n),
+        "w_C": (cfg.d_model, n),
+        "w_dt": (cfg.d_model, h),
+        "dt_bias": (h,),
+        "conv_x": (k, di),
+        "conv_x_b": (di,),
+        "conv_B": (k, n),
+        "conv_B_b": (n,),
+        "conv_C": (k, n),
+        "conv_C_b": (n,),
+        "A_log": (h,),
+        "D_skip": (h,),
+        "norm": (di,),
+        "out_proj": (di, cfg.d_model),
+    }
+
+
+_SSM_AXES = {
+    "norm_in": ("d_model",),
+    "w_z": ("d_model", "ssm_inner"),
+    "w_x": ("d_model", "ssm_inner"),
+    "w_B": ("d_model", "ssm_state"),
+    "w_C": ("d_model", "ssm_state"),
+    "w_dt": ("d_model", "ssm_heads"),
+    "dt_bias": ("ssm_heads",),
+    "conv_x": ("conv_width", "ssm_inner"),
+    "conv_x_b": ("ssm_inner",),
+    "conv_B": ("conv_width", "ssm_state"),
+    "conv_B_b": ("ssm_state",),
+    "conv_C": ("conv_width", "ssm_state"),
+    "conv_C_b": ("ssm_state",),
+    "A_log": ("ssm_heads",),
+    "D_skip": ("ssm_heads",),
+    "norm": ("ssm_inner",),
+    "out_proj": ("ssm_inner", "d_model"),
+}
+
+
+def _block_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    if cfg.family == "ssm":
+        return _ssm_shapes(cfg)
+    if cfg.family == "hybrid":
+        return _ssm_shapes(cfg)
+    if cfg.family == "moe":
+        return {**_attn_shapes(cfg, cfg.d_model), **_moe_shapes(cfg)}
+    return {**_attn_shapes(cfg, cfg.d_model), **_ffn_shapes(cfg)}
+
+
+def _attn_axes(cfg: ModelConfig) -> dict[str, tuple]:
+    axes = dict(_ATTN_AXES)
+    if not cfg.qkv_bias:
+        for b in ("bq", "bk", "bv"):
+            axes.pop(b)
+    return axes
+
+
+def _block_axes(cfg: ModelConfig) -> dict[str, tuple]:
+    if cfg.family in ("ssm", "hybrid"):
+        return dict(_SSM_AXES)
+    if cfg.family == "moe":
+        return {**_attn_axes(cfg), **_MOE_AXES}
+    return {**_attn_axes(cfg), **_FFN_AXES}
+
+
+def _shared_block_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    """Zamba2-style shared attention+FFN block over concat(h, x0) (2·d)."""
+    s = _attn_shapes(cfg, 2 * cfg.d_model)
+    s.update(
+        {
+            "ffn_norm": (cfg.d_model,),
+            "w_gate": (cfg.d_model, cfg.d_ff),
+            "w_up": (cfg.d_model, cfg.d_ff),
+            "w_down": (cfg.d_ff, cfg.d_model),
+        }
+    )
+    return s
+
+
+def _encdec_extra_shapes(cfg: ModelConfig) -> dict[str, dict[str, tuple]]:
+    enc = {**_attn_shapes(cfg, cfg.d_model), **_ffn_shapes(cfg)}
+    cross = {
+        "xattn_norm": (cfg.d_model,),
+        "xwq": (cfg.d_model, cfg.n_heads, cfg.resolved_head_dim),
+        "xwk": (cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim),
+        "xwv": (cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim),
+        "xwo": (cfg.n_heads, cfg.resolved_head_dim, cfg.d_model),
+    }
+    return {"enc": enc, "cross": cross}
+
+
+_CROSS_AXES = {
+    "xattn_norm": ("d_model",),
+    "xwq": ("d_model", "heads", "head_dim"),
+    "xwk": ("d_model", "kv_heads", "head_dim"),
+    "xwv": ("d_model", "kv_heads", "head_dim"),
+    "xwo": ("heads", "head_dim", "d_model"),
+}
+
+
+def _init_tree(key, shapes: dict[str, tuple], n_layers: int | None, dtype) -> dict:
+    out = {}
+    keys = jax.random.split(key, len(shapes))
+    for k_, (name, shape) in zip(keys, sorted(shapes.items())):
+        full = (n_layers, *shape) if n_layers else shape
+        if name.endswith(("norm", "_b", "norm_in")) or name in ("dt_bias",):
+            base = jnp.ones(full, dtype) if "norm" in name else jnp.zeros(full, dtype)
+            out[name] = base
+        elif name == "A_log":
+            # init A in [1, 16) as in Mamba2
+            a0 = jnp.log(1.0 + 15.0 * jax.random.uniform(k_, full, jnp.float32))
+            out[name] = a0.astype(jnp.float32)
+        elif name == "D_skip":
+            out[name] = jnp.ones(full, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) == 1 else (
+                shape[0] * shape[1] if name in ("wo", "xwo") else shape[0]
+            )
+            out[name] = _dense(k_, full, max(1, fan_in), dtype)
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_blocks, k_head, k_extra = jax.random.split(key, 4)
+    params: dict = {
+        "embed": _dense(k_embed, (cfg.padded_vocab, cfg.d_model), cfg.d_model, dtype),
+        "blocks": _init_tree(k_blocks, _block_shapes(cfg), cfg.n_layers, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(k_head, (cfg.d_model, cfg.padded_vocab), cfg.d_model, dtype)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        params["shared"] = _init_tree(k_extra, _shared_block_shapes(cfg), None, dtype)
+    if cfg.is_encoder_decoder:
+        extra = _encdec_extra_shapes(cfg)
+        ke, kc = jax.random.split(k_extra)
+        params["enc_blocks"] = _init_tree(ke, extra["enc"], cfg.encoder_layers, dtype)
+        params["enc_final_norm"] = jnp.ones((cfg.d_model,), dtype)
+        params["cross"] = _init_tree(kc, extra["cross"], cfg.n_layers, dtype)
+    return params
+
+
+def _axes_tree(axes: dict[str, tuple], stacked: bool) -> dict:
+    if not stacked:
+        return dict(axes)
+    return {k: ("layers", *v) for k, v in axes.items()}
+
+
+def logical_axes(cfg: ModelConfig) -> dict:
+    axes: dict = {
+        "embed": ("vocab", "d_model"),
+        "blocks": _axes_tree(_block_axes(cfg), stacked=True),
+        "final_norm": ("d_model",),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("d_model", "vocab")
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        axes["shared"] = {**_attn_axes(cfg), **_FFN_AXES}
+    if cfg.is_encoder_decoder:
+        axes["enc_blocks"] = _axes_tree({**_attn_axes(cfg), **_FFN_AXES}, stacked=True)
+        axes["enc_final_norm"] = ("d_model",)
+        axes["cross"] = _axes_tree(_CROSS_AXES, stacked=True)
+    return axes
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct pytree — dry-run stand-in, no allocation."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def mk(shapes: dict[str, tuple], n_layers: int | None) -> dict:
+        out = {}
+        for name, shape in sorted(shapes.items()):
+            full = (n_layers, *shape) if n_layers else shape
+            dt = jnp.float32 if name in ("A_log", "D_skip") else dtype
+            out[name] = jax.ShapeDtypeStruct(full, dt)
+        return out
+
+    params: dict = {
+        "embed": jax.ShapeDtypeStruct((cfg.padded_vocab, cfg.d_model), dtype),
+        "blocks": mk(_block_shapes(cfg), cfg.n_layers),
+        "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.ShapeDtypeStruct((cfg.d_model, cfg.padded_vocab), dtype)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        params["shared"] = mk(_shared_block_shapes(cfg), None)
+    if cfg.is_encoder_decoder:
+        extra = _encdec_extra_shapes(cfg)
+        params["enc_blocks"] = mk(extra["enc"], cfg.encoder_layers)
+        params["enc_final_norm"] = jax.ShapeDtypeStruct((cfg.d_model,), dtype)
+        params["cross"] = mk(extra["cross"], cfg.n_layers)
+    return params

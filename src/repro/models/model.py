@@ -1,0 +1,550 @@
+"""Model assembly: train forward, chunked loss, prefill and decode_step for
+every assigned family (dense / moe / ssm / hybrid / audio enc-dec / vlm).
+
+All layer stacks run under ``lax.scan`` (compact HLO at 80+ layers) with a
+configurable remat policy.  Caches are explicit pytrees so ``serve_step``
+lowers cleanly under pjit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from .init import init_params, logical_axes, abstract_params  # re-export
+from .moe import moe_ffn
+from .scan import layer_scan, maybe_cond
+from .ops import decode_attention, gqa_attention, rms_norm, rope, swiglu
+from .ssm import init_ssm_state, mamba_decode_step, mamba_mixer
+
+__all__ = [
+    "init_params",
+    "logical_axes",
+    "abstract_params",
+    "forward_hidden",
+    "train_loss",
+    "init_cache",
+    "prefill",
+    "decode_step",
+    "encode",
+    "lm_logits",
+]
+
+AUX_COEF = 0.01
+
+
+def _layer_indices(cfg: ModelConfig):
+    """Layer indices for the hybrid cond: concrete ints when unrolled so
+    maybe_cond prunes untaken branches (exact roofline probes)."""
+    import numpy as np
+
+    if cfg.scan_layers:
+        return jnp.arange(cfg.n_layers)
+    return np.arange(cfg.n_layers)
+
+
+# =============================================================== primitives
+def _qkv(x, bp, cfg: ModelConfig, prefix: str = "w"):
+    q = jnp.einsum("bsd,dhk->bshk", x, bp[f"{prefix}q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, bp[f"{prefix}k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, bp[f"{prefix}v"])
+    if cfg.qkv_bias and prefix == "w":
+        q = q + bp["bq"]
+        k = k + bp["bk"]
+        v = v + bp["bv"]
+    return q, k, v
+
+
+def _attn(h, bp, cfg: ModelConfig, *, causal: bool, positions, kv_positions=None, kv_src=None):
+    """Self- (kv_src None) or cross-attention block body."""
+    x = rms_norm(h, bp["attn_norm"], cfg.norm_eps)
+    src = x if kv_src is None else kv_src
+    q, k, v = _qkv(x, bp, cfg)
+    if kv_src is not None:
+        _, k, v = _qkv(src, bp, cfg)
+    if causal:  # RoPE only on the causal (decoder) paths
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions if kv_positions is not None else positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    out = gqa_attention(q, k, v, causal=causal, impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                        sm_dtype=jnp.dtype(cfg.softmax_dtype))
+    return jnp.einsum("bshk,hkd->bsd", out, bp["wo"])
+
+
+def _cross_attn(h, cp, cfg: ModelConfig, enc_out):
+    x = rms_norm(h, cp["xattn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", x, cp["xwq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, cp["xwk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, cp["xwv"])
+    out = gqa_attention(q, k, v, causal=False, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, cp["xwo"])
+
+
+def _ffn(h, bp, cfg: ModelConfig):
+    x = rms_norm(h, bp["ffn_norm"], cfg.norm_eps)
+    if cfg.moe.enabled:
+        return moe_ffn(x, bp, cfg.moe)
+    return swiglu(x, bp["w_gate"], bp["w_up"], bp["w_down"]), jnp.zeros((), jnp.float32)
+
+
+def _shared_block(h, x0, sp, cfg: ModelConfig, positions):
+    """Zamba2 shared block: attention over concat(h, x0) (2·d) + SwiGLU FFN."""
+    u = rms_norm(jnp.concatenate([h, x0], axis=-1), sp["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(u, sp, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    out = gqa_attention(q, k, v, causal=True, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+    h = h + jnp.einsum("bshk,hkd->bsd", out, sp["wo"])
+    f = swiglu(rms_norm(h, sp["ffn_norm"], cfg.norm_eps), sp["w_gate"], sp["w_up"], sp["w_down"])
+    return h + f
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ============================================================ train forward
+def embed_inputs(params, cfg: ModelConfig, inputs) -> jax.Array:
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        return params["embed"][inputs]
+    return inputs.astype(jnp.dtype(cfg.dtype))  # precomputed frame/patch embeddings
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over precomputed frame embeddings."""
+    h = frames.astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(h.shape[1])
+
+    def body(carry, bp):
+        hh = carry
+        hh = hh + _attn(hh, bp, cfg, causal=False, positions=positions)
+        f, _ = _ffn(hh, bp, cfg)
+        return hh + f, None
+
+    h, _ = layer_scan(_remat(body, cfg), h, params["enc_blocks"], unroll=not cfg.scan_layers)
+    return rms_norm(h, params["enc_final_norm"], cfg.norm_eps)
+
+
+def forward_hidden(params, cfg: ModelConfig, inputs, *, enc_out=None):
+    """Full-sequence causal forward -> (hidden (B,S,D), aux loss)."""
+    h = embed_inputs(params, cfg, inputs)
+    h = constrain(h, "batch", "seq", "d_model")
+    positions = jnp.arange(h.shape[1])
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, bp):
+            hh, aux = carry
+            hh = hh + _attn(hh, bp, cfg, causal=True, positions=positions)
+            f, a = _ffn(hh, bp, cfg)
+            # SP: between blocks the residual stream is sequence-sharded on
+            # the model axis (no-op unless cfg.seq_shard)
+            hh = constrain(hh + f, "batch", "seq_sp", "d_model")
+            return (hh, aux + a), None
+
+        (h, aux), _ = layer_scan(_remat(body, cfg), (h, jnp.zeros((), jnp.float32)), params["blocks"], unroll=not cfg.scan_layers)
+
+    elif cfg.family == "audio":
+        assert enc_out is not None, "audio family needs encoder output"
+        def body(carry, xs):
+            hh = carry
+            bp, cp = xs
+            hh = hh + _attn(hh, bp, cfg, causal=True, positions=positions)
+            hh = hh + _cross_attn(hh, cp, cfg, enc_out)
+            f, _ = _ffn(hh, bp, cfg)
+            return hh + f, None
+
+        h, _ = layer_scan(_remat(body, cfg), h, (params["blocks"], params["cross"]), unroll=not cfg.scan_layers)
+        aux = jnp.zeros((), jnp.float32)
+
+    elif cfg.family == "ssm":
+        def body(carry, bp):
+            hh = carry
+            hh = hh + mamba_mixer(rms_norm(hh, bp["norm_in"], cfg.norm_eps), bp, cfg)
+            return hh, None
+
+        h, _ = layer_scan(_remat(body, cfg), h, params["blocks"], unroll=not cfg.scan_layers)
+        aux = jnp.zeros((), jnp.float32)
+
+    elif cfg.family == "hybrid":
+        x0 = h
+        every = cfg.hybrid_attn_every
+        sp = params["shared"]
+
+        def body(carry, xs):
+            hh = carry
+            bp, idx = xs
+            hh = hh + mamba_mixer(rms_norm(hh, bp["norm_in"], cfg.norm_eps), bp, cfg)
+            hh = maybe_cond(
+                (idx % every) == every - 1,
+                lambda v: _shared_block(v, x0, sp, cfg, positions),
+                lambda v: v,
+                hh,
+            )
+            return hh, None
+
+        h, _ = layer_scan(
+            _remat(body, cfg), h, (params["blocks"], _layer_indices(cfg)),
+            unroll=not cfg.scan_layers,
+        )
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), aux
+
+
+def lm_logits(params, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("...d,dv->...v", hidden, head)
+
+
+def _chunked_ce(hidden, head, targets, *, n_chunks: int = 8, ce_dtype=jnp.float32):
+    """Cross-entropy without materialising the full (T, V) logits.
+
+    A fixed, Python-unrolled chunk count (not lax.scan) keeps peak memory at
+    T/n_chunks × V while remaining visible to XLA cost analysis (a while
+    loop's body would be counted once — see roofline/probes.py).
+    """
+    b, s, d = hidden.shape
+    t = b * s
+    hf = hidden.reshape(t, d)
+    tf = targets.reshape(t)
+    n_chunks = max(1, min(n_chunks, t))
+    chunk = (t + n_chunks - 1) // n_chunks
+    if chunk * n_chunks != t:
+        pad = chunk * n_chunks - t
+        hf = jnp.pad(hf, ((0, pad), (0, 0)))
+        tf = jnp.pad(tf, (0, pad), constant_values=-1)
+    hc = hf.reshape(n_chunks, chunk, d)
+    tc = tf.reshape(n_chunks, chunk)
+
+    tot = jnp.zeros((), jnp.float32)
+    cnt = jnp.zeros((), jnp.int32)
+    for i in range(n_chunks):
+        hx, tx = hc[i], tc[i]
+        logits = jnp.einsum("cd,dv->cv", hx, head).astype(ce_dtype)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        tgt = jnp.take_along_axis(logits, jnp.maximum(tx, 0)[:, None], axis=-1)[:, 0]
+        valid = tx >= 0
+        tot = tot + jnp.sum(jnp.where(valid, lse - tgt, 0.0))
+        cnt = cnt + jnp.sum(valid)
+    return tot / jnp.maximum(cnt, 1)
+
+
+def train_loss(params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, dict]:
+    """batch: tokens/embeds/frames + targets (B,S) int32 (-1 = ignore)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, batch["frames"])
+        inputs = batch["tokens"]
+    elif cfg.input_kind == "patches":
+        inputs = batch["embeds"]
+    else:
+        inputs = batch["tokens"]
+    hidden, aux = forward_hidden(params, cfg, inputs, enc_out=enc_out)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ce = _chunked_ce(hidden, head, batch["targets"], ce_dtype=jnp.dtype(cfg.ce_dtype))
+    loss = ce + AUX_COEF * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# =================================================================== caches
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, *, enc_len: int = 0) -> dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    cache: dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        cache["k"] = jnp.zeros((L, batch, cache_len, cfg.n_kv_heads, hd), dtype)
+        cache["v"] = jnp.zeros((L, batch, cache_len, cfg.n_kv_heads, hd), dtype)
+    if cfg.family == "audio":
+        cache["xk"] = jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, hd), dtype)
+        cache["xv"] = jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, hd), dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        st = init_ssm_state(cfg, batch, dtype)
+        cache["conv"] = jnp.zeros((L, *st["conv"].shape), dtype)
+        cache["ssm"] = jnp.zeros((L, *st["ssm"].shape), jnp.float32)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        n_sites = cfg.n_layers // cfg.hybrid_attn_every
+        cache["shared_k"] = jnp.zeros((n_sites, batch, cache_len, cfg.n_kv_heads, hd), dtype)
+        cache["shared_v"] = jnp.zeros((n_sites, batch, cache_len, cfg.n_kv_heads, hd), dtype)
+        cache["x0"] = jnp.zeros((batch, 1, cfg.d_model), dtype)  # embedding of last token
+    return cache
+
+
+# ================================================================== prefill
+def prefill(params, cfg: ModelConfig, inputs, cache: dict, *, enc_frames=None):
+    """Run the full prompt, fill the cache, return last-token logits."""
+    h = embed_inputs(params, cfg, inputs)
+    s = h.shape[1]
+    positions = jnp.arange(s)
+    if "k" in cache:
+        cache_len = cache["k"].shape[2]
+    elif "shared_k" in cache:
+        cache_len = cache["shared_k"].shape[2]
+    else:
+        cache_len = None
+
+    def pad_to_cache(arr):  # (B,S,K,hd) -> (B,T,K,hd)
+        return jnp.pad(arr, ((0, 0), (0, cache_len - s), (0, 0), (0, 0)))
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, enc_frames)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, bp):
+            hh = carry
+            x = rms_norm(hh, bp["attn_norm"], cfg.norm_eps)
+            q, k, v = _qkv(x, bp, cfg)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            out = gqa_attention(q, k, v, causal=True, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+            hh = hh + jnp.einsum("bshk,hkd->bsd", out, bp["wo"])
+            f, _ = _ffn(hh, bp, cfg)
+            return hh + f, (pad_to_cache(k), pad_to_cache(v))
+
+        h, (kc, vc) = layer_scan(body, h, params["blocks"], unroll=not cfg.scan_layers)
+        cache = {**cache, "k": kc, "v": vc, "pos": jnp.full((h.shape[0],), s, jnp.int32)}
+
+    elif cfg.family == "audio":
+        def body(carry, xs):
+            hh = carry
+            bp, cp = xs
+            x = rms_norm(hh, bp["attn_norm"], cfg.norm_eps)
+            q, k, v = _qkv(x, bp, cfg)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            out = gqa_attention(q, k, v, causal=True, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+            hh = hh + jnp.einsum("bshk,hkd->bsd", out, bp["wo"])
+            hh = hh + _cross_attn(hh, cp, cfg, enc_out)
+            xk = jnp.einsum("bsd,dhk->bshk", enc_out, cp["xwk"])
+            xv = jnp.einsum("bsd,dhk->bshk", enc_out, cp["xwv"])
+            f, _ = _ffn(hh, bp, cfg)
+            return hh + f, (pad_to_cache(k), pad_to_cache(v), xk, xv)
+
+        h, (kc, vc, xkc, xvc) = layer_scan(body, h, (params["blocks"], params["cross"]), unroll=not cfg.scan_layers)
+        cache = {**cache, "k": kc, "v": vc, "xk": xkc, "xv": xvc, "pos": jnp.full((h.shape[0],), s, jnp.int32)}
+
+    elif cfg.family == "ssm":
+        def body(carry, bp):
+            hh = carry
+            x = rms_norm(hh, bp["norm_in"], cfg.norm_eps)
+            # rerun mixer capturing final state: use ssd with return_state
+            from .ssm import _project, causal_conv1d  # local import to reuse internals
+
+            b = x.shape[0]
+            di, n, hds, p = cfg.d_inner, cfg.ssm.d_state, cfg.ssm_heads, cfg.ssm.head_dim
+            z, xin, B_, C_, dt = _project(x, bp)
+            xin_c = causal_conv1d(xin, bp["conv_x"], bp["conv_x_b"])
+            B_c = causal_conv1d(B_, bp["conv_B"], bp["conv_B_b"])
+            C_c = causal_conv1d(C_, bp["conv_C"], bp["conv_C_b"])
+            xh = xin_c.reshape(b, s, hds, p)
+            A = -jnp.exp(bp["A_log"].astype(jnp.float32))
+            from .ssm import ssd_chunked
+
+            y, hstate = ssd_chunked(xh, dt, A, B_c, C_c, bp["D_skip"], chunk=cfg.ssm.chunk, return_state=True)
+            y = y.reshape(b, s, di)
+            y = rms_norm(y * jax.nn.silu(z), bp["norm"], cfg.norm_eps)
+            hh = hh + jnp.einsum("bse,ed->bsd", y, bp["out_proj"])
+            # conv state: last (K-1) *pre-conv* inputs of each stream
+            k1 = cfg.ssm.d_conv - 1
+            conv_state = jnp.concatenate([xin[:, -k1:], B_[:, -k1:], C_[:, -k1:]], axis=-1)
+            return hh, (conv_state, hstate)
+
+        h, (convs, ssms) = layer_scan(body, h, params["blocks"], unroll=not cfg.scan_layers)
+        cache = {**cache, "conv": convs, "ssm": ssms, "pos": jnp.full((h.shape[0],), s, jnp.int32)}
+
+    elif cfg.family == "hybrid":
+        x0 = h
+        every = cfg.hybrid_attn_every
+        sp = params["shared"]
+        n_sites = cfg.n_layers // every
+
+        def body(carry, xs):
+            hh, sk, sv = carry
+            bp, idx = xs
+            x = rms_norm(hh, bp["norm_in"], cfg.norm_eps)
+            from .ssm import _project, causal_conv1d, ssd_chunked
+
+            b = x.shape[0]
+            di, n, hds, p = cfg.d_inner, cfg.ssm.d_state, cfg.ssm_heads, cfg.ssm.head_dim
+            z, xin, B_, C_, dt = _project(x, bp)
+            xin_c = causal_conv1d(xin, bp["conv_x"], bp["conv_x_b"])
+            B_c = causal_conv1d(B_, bp["conv_B"], bp["conv_B_b"])
+            C_c = causal_conv1d(C_, bp["conv_C"], bp["conv_C_b"])
+            xh = xin_c.reshape(b, s, hds, p)
+            A = -jnp.exp(bp["A_log"].astype(jnp.float32))
+            y, hstate = ssd_chunked(xh, dt, A, B_c, C_c, bp["D_skip"], chunk=cfg.ssm.chunk, return_state=True)
+            y = y.reshape(b, s, di)
+            y = rms_norm(y * jax.nn.silu(z), bp["norm"], cfg.norm_eps)
+            hh = hh + jnp.einsum("bse,ed->bsd", y, bp["out_proj"])
+            k1 = cfg.ssm.d_conv - 1
+            conv_state = jnp.concatenate([xin[:, -k1:], B_[:, -k1:], C_[:, -k1:]], axis=-1)
+
+            def apply_shared(operand):
+                hh_, sk_, sv_ = operand
+                u = rms_norm(jnp.concatenate([hh_, x0], axis=-1), sp["attn_norm"], cfg.norm_eps)
+                q, k, v = _qkv(u, sp, cfg)
+                q = rope(q, positions, cfg.rope_theta)
+                k = rope(k, positions, cfg.rope_theta)
+                out = gqa_attention(q, k, v, causal=True, impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+                hh_ = hh_ + jnp.einsum("bshk,hkd->bsd", out, sp["wo"])
+                f = swiglu(rms_norm(hh_, sp["ffn_norm"], cfg.norm_eps), sp["w_gate"], sp["w_up"], sp["w_down"])
+                site = idx // every
+                sk_ = jax.lax.dynamic_update_slice(sk_, pad_to_cache(k)[None], (site, 0, 0, 0, 0))
+                sv_ = jax.lax.dynamic_update_slice(sv_, pad_to_cache(v)[None], (site, 0, 0, 0, 0))
+                return hh_ + f, sk_, sv_
+
+            hh, sk, sv = maybe_cond(
+                (idx % every) == every - 1, apply_shared, lambda o: o, (hh, sk, sv)
+            )
+            return (hh, sk, sv), (conv_state, hstate)
+
+        (h, sk, sv), (convs, ssms) = layer_scan(
+            body, (h, cache["shared_k"], cache["shared_v"]),
+            (params["blocks"], _layer_indices(cfg)), unroll=not cfg.scan_layers,
+        )
+        cache = {
+            **cache,
+            "conv": convs,
+            "ssm": ssms,
+            "shared_k": sk,
+            "shared_v": sv,
+            "x0": x0[:, -1:, :],
+            "pos": jnp.full((h.shape[0],), s, jnp.int32),
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, cfg, h[:, -1:, :])[:, 0]
+    return logits, cache
+
+
+# ==================================================================== decode
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: dict):
+    """One decode step.  token: (B,1) int32 -> (logits (B,V), new cache).
+
+    ``cache['pos']`` is a PER-ROW (B,) position vector: rows may sit at
+    different depths (continuous batching); each row writes its KV at its
+    own position and attends to its own length.
+    """
+    h = embed_inputs(params, cfg, token)
+    pos = cache["pos"]  # (B,)
+    b_rows = jnp.arange(h.shape[0])
+    positions = pos[:, None]  # (B,1) for RoPE
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            hh = carry
+            bp, kl, vl = xs
+            x = rms_norm(hh, bp["attn_norm"], cfg.norm_eps)
+            q, k, v = _qkv(x, bp, cfg)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            kl = kl.at[b_rows, pos].set(k[:, 0])
+            vl = vl.at[b_rows, pos].set(v[:, 0])
+            out = decode_attention(q, kl, vl, pos + 1)
+            hh = hh + jnp.einsum("bshk,hkd->bsd", out, bp["wo"])
+            f, _ = _ffn(hh, bp, cfg)
+            return hh + f, (kl, vl)
+
+        h, (kc, vc) = layer_scan(body, h, (params["blocks"], cache["k"], cache["v"]), unroll=not cfg.scan_layers)
+        cache = {**cache, "k": kc, "v": vc, "pos": pos + 1}
+
+    elif cfg.family == "audio":
+        def body(carry, xs):
+            hh = carry
+            bp, cp, kl, vl, xkl, xvl = xs
+            x = rms_norm(hh, bp["attn_norm"], cfg.norm_eps)
+            q, k, v = _qkv(x, bp, cfg)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            kl = kl.at[b_rows, pos].set(k[:, 0])
+            vl = vl.at[b_rows, pos].set(v[:, 0])
+            out = decode_attention(q, kl, vl, pos + 1)
+            hh = hh + jnp.einsum("bshk,hkd->bsd", out, bp["wo"])
+            # cross-attention against the precomputed encoder KV
+            xq = jnp.einsum("bsd,dhk->bshk", rms_norm(hh, cp["xattn_norm"], cfg.norm_eps), cp["xwq"])
+            xout = decode_attention(xq, xkl, xvl, jnp.asarray(xkl.shape[1], jnp.int32))
+            hh = hh + jnp.einsum("bshk,hkd->bsd", xout, cp["xwo"])
+            f, _ = _ffn(hh, bp, cfg)
+            return hh + f, (kl, vl)
+
+        h, (kc, vc) = layer_scan(
+            body, h, (params["blocks"], params["cross"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+            unroll=not cfg.scan_layers,
+        )
+        cache = {**cache, "k": kc, "v": vc, "pos": pos + 1}
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            hh = carry
+            bp, conv, ssm = xs
+            y, st = mamba_decode_step(rms_norm(hh, bp["norm_in"], cfg.norm_eps), {"conv": conv, "ssm": ssm}, bp, cfg)
+            return hh + y, (st["conv"], st["ssm"])
+
+        h, (convs, ssms) = layer_scan(body, h, (params["blocks"], cache["conv"], cache["ssm"]), unroll=not cfg.scan_layers)
+        cache = {**cache, "conv": convs, "ssm": ssms, "pos": pos + 1}
+
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        sp = params["shared"]
+        x0 = cache["x0"]
+
+        def body(carry, xs):
+            hh, sk, sv = carry
+            bp, conv, ssm, idx = xs
+            y, st = mamba_decode_step(rms_norm(hh, bp["norm_in"], cfg.norm_eps), {"conv": conv, "ssm": ssm}, bp, cfg)
+            hh = hh + y
+
+            def apply_shared(operand):
+                hh_, sk_, sv_ = operand
+                u = rms_norm(jnp.concatenate([hh_, x0], axis=-1), sp["attn_norm"], cfg.norm_eps)
+                q, k, v = _qkv(u, sp, cfg)
+                q = rope(q, positions, cfg.rope_theta)
+                k = rope(k, positions, cfg.rope_theta)
+                site = idx // every
+                kl = sk_[site]
+                vl = sv_[site]
+                kl = kl.at[b_rows, pos].set(k[:, 0])
+                vl = vl.at[b_rows, pos].set(v[:, 0])
+                out = decode_attention(q, kl, vl, pos + 1)
+                hh_ = hh_ + jnp.einsum("bshk,hkd->bsd", out, sp["wo"])
+                f = swiglu(rms_norm(hh_, sp["ffn_norm"], cfg.norm_eps), sp["w_gate"], sp["w_up"], sp["w_down"])
+                sk_ = jax.lax.dynamic_update_slice(sk_, kl[None], (site, 0, 0, 0, 0))
+                sv_ = jax.lax.dynamic_update_slice(sv_, vl[None], (site, 0, 0, 0, 0))
+                return hh_ + f, sk_, sv_
+
+            hh, sk, sv = maybe_cond(
+                (idx % every) == every - 1, apply_shared, lambda o: o, (hh, sk, sv)
+            )
+            return (hh, sk, sv), (st["conv"], st["ssm"])
+
+        (h, sk, sv), (convs, ssms) = layer_scan(
+            body,
+            (h, cache["shared_k"], cache["shared_v"]),
+            (params["blocks"], cache["conv"], cache["ssm"], _layer_indices(cfg)),
+            unroll=not cfg.scan_layers,
+        )
+        # x0 stays the prompt-embedding context vector; update to latest token embed
+        cache = {
+            **cache, "conv": convs, "ssm": ssms, "shared_k": sk, "shared_v": sv,
+            "x0": embed_inputs(params, cfg, token), "pos": pos + 1,
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, cfg, h[:, 0, :])
+    return logits, cache

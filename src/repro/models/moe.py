@@ -1,0 +1,84 @@
+"""Mixture-of-Experts layer: top-k routing + GShard-style capacity dispatch.
+
+Dispatch/combine are expressed as einsums over a (group, expert, capacity)
+one-hot so GSPMD turns expert parallelism into all-to-alls on the `model`
+axis.  The per-k unrolled construction keeps the largest transient at
+(G, E, C) rather than (G, K, E, C).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.distributed.sharding import constrain
+
+__all__ = ["moe_ffn", "router_topk"]
+
+
+def router_topk(logits: jax.Array, moe: MoEConfig, capacity: int):
+    """logits: (..., G, E) -> (dispatch (...,G,E,C) bool-ish, combine (...,G,E,C) f32, aux loss).
+
+    Earlier tokens get priority for capacity slots (GShard).  Slots overflow
+    -> token's weight for that expert drops (standard token dropping).
+    """
+    e = logits.shape[-1]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, moe.top_k)  # (..., G, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # per-expert running count in token-major, choice-minor order
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)  # (..., G, K, E)
+    shp = onehot.shape
+    flat = onehot.reshape(*shp[:-3], shp[-3] * shp[-2], e)  # (..., G*K, E)
+    pos_flat = jnp.cumsum(flat, axis=-2) - flat
+    pos = pos_flat.reshape(shp)  # (..., G, K, E) position among expert's tokens
+
+    dispatch = None
+    combine = None
+    for k in range(moe.top_k):
+        oh_k = onehot[..., k, :]                      # (..., G, E)
+        pos_k = (pos[..., k, :] * oh_k).sum(-1)       # (..., G) slot for this choice
+        within = ((pos[..., k, :] < capacity) & (oh_k > 0))  # (..., G, E)
+        slot = jax.nn.one_hot(pos_k, capacity, dtype=jnp.float32)  # (..., G, C)
+        d_k = within[..., :, None] * slot[..., None, :]            # (..., G, E, C)
+        c_k = d_k * gate_vals[..., k][..., None, None]
+        dispatch = d_k if dispatch is None else dispatch + d_k
+        combine = c_k if combine is None else combine + c_k
+
+    # Switch-style load-balance aux loss
+    density = onehot.sum(-2).mean(axis=tuple(range(onehot.ndim - 2))) / moe.top_k  # fraction per expert
+    prob_mass = probs.mean(axis=tuple(range(probs.ndim - 1)))
+    aux = e * jnp.sum(density * prob_mass)
+    return dispatch, combine, aux
+
+
+def moe_ffn(x: jax.Array, params: dict, moe: MoEConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (B, S, D), aux-loss.
+
+    params: router (D, E), w_gate/w_up (E, D, F), w_down (E, F, D).
+    """
+    b, s, d = x.shape
+    g = min(moe.group_size, b * s)
+    tokens = x.reshape(b * s, d)
+    n_groups = (b * s) // g
+    xg = tokens.reshape(n_groups, g, d)
+
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32), params["router"].astype(jnp.float32))
+    if moe.e_total > moe.n_experts:  # mask padded expert slots (EP padding)
+        pad_mask = jnp.arange(moe.e_total) >= moe.n_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e9, logits)
+    capacity = max(1, int(moe.top_k * g / moe.n_experts * moe.capacity_factor))
+    dispatch, combine, aux = router_topk(logits, moe, capacity)
+
+    dispatch = dispatch.astype(x.dtype)
+    expert_in = jnp.einsum("ngec,ngd->necd", dispatch, xg)
+    expert_in = constrain(expert_in, None, "experts", None, "d_model")
+    gate = jnp.einsum("necd,edf->necf", expert_in, params["w_gate"])
+    up = jnp.einsum("necd,edf->necf", expert_in, params["w_up"])
+    hidden = jax.nn.silu(gate) * up
+    hidden = constrain(hidden, None, "experts", None, "d_expert")
+    expert_out = jnp.einsum("necf,efd->necd", hidden, params["w_down"])
+    out = jnp.einsum("ngec,necd->ngd", combine.astype(x.dtype), expert_out)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,190 @@
+"""Model building blocks: norms, RoPE, attention (naive/chunked/decode), FFN.
+
+Everything is a pure function over explicit parameter pytrees; dtype policy
+is bf16 compute with fp32 softmax/norm accumulations.  ``attn_impl``
+selects between the naive S² implementation, the chunked online-softmax
+(flash-style, pure XLA) implementation, and the Pallas TPU kernel.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "swiglu",
+    "gqa_attention",
+    "decode_attention",
+    "causal_mask_bias",
+]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, d), positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = _rope_freqs(d, theta)  # (d/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "batch", "seq", "d_ff")
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def causal_mask_bias(s_q: int, s_k: int, q_offset: int = 0, dtype=jnp.float32) -> jax.Array:
+    """(s_q, s_k) additive bias; query i attends keys j <= i + q_offset."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return jnp.where(kj <= qi, 0.0, -jnp.inf).astype(dtype)
+
+
+def _split_gqa(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, S, H, d) -> (B, S, K, G, d) with H = K*G."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def _naive_attention(q, k, v, *, causal: bool, q_offset: int = 0) -> jax.Array:
+    """q: (B,S,K,G,d), k/v: (B,T,K,d) -> (B,S,K,G,d).  fp32 softmax."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    if causal:
+        scores = scores + causal_mask_bias(q.shape[1], k.shape[1], q_offset)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", w, v)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_offset: int = 0, chunk: int = 1024, sm_dtype=jnp.float32) -> jax.Array:
+    """Online-softmax over KV chunks — flash-style in pure XLA.
+
+    Never materialises the full (S, T) score matrix: peak scratch is
+    (B,K,G,S,chunk).  The chunk loop is PYTHON-UNROLLED (not lax.scan):
+    causal chunks below the diagonal are skipped entirely at trace time
+    (≈2× fewer score blocks) and every block stays visible to XLA cost
+    analysis (a scanned body would be counted once — roofline/probes.py).
+    """
+    b, s, kh, g, d = q.shape
+    t = k.shape[1]
+    nk = (t + chunk - 1) // chunk
+    pad = nk * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nk, chunk, kh, d)
+    vc = v.reshape(b, nk, chunk, kh, d)
+    qchunk = min(chunk, s)
+    nq = (s + qchunk - 1) // qchunk
+    qpad = nq * qchunk - s
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0), (0, 0)))
+    scale = 1.0 / math.sqrt(d)
+
+    out_blocks = []
+    for qi in range(nq):
+        qb = q[:, qi * qchunk : (qi + 1) * qchunk]
+        q_hi = qi * qchunk + qchunk - 1 + q_offset  # last absolute q position
+        m = jnp.full((b, kh, g, qchunk), -jnp.inf, sm_dtype)
+        l = jnp.zeros((b, kh, g, qchunk), sm_dtype)
+        acc = jnp.zeros((b, qchunk, kh, g, d), sm_dtype)
+        for ci in range(nk):
+            if causal and ci * chunk > q_hi:
+                continue  # block fully above the causal diagonal: pruned at trace time
+            kb, vb = kc[:, ci], vc[:, ci]
+            scores = jnp.einsum("bskgd,btkd->bkgst", qb, kb).astype(sm_dtype) * scale
+            kpos = ci * chunk + jnp.arange(chunk)
+            valid = kpos < t
+            diagonal = causal and (ci + 1) * chunk - 1 > qi * qchunk + q_offset
+            if diagonal or qpad:
+                qpos = qi * qchunk + jnp.arange(qchunk) + q_offset
+                keep = valid[None, :] & (
+                    (kpos[None, :] <= qpos[:, None]) if causal else True
+                )
+                scores = jnp.where(keep[None, None, None], scores, -jnp.inf)
+            elif pad:
+                scores = jnp.where(valid[None, None, None, None, :], scores, -jnp.inf)
+            m_new = jnp.maximum(m, scores.max(axis=-1))
+            # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> nan
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            alpha = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            p = jnp.exp(scores - m_safe[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgst,btkd->bskgd", p.astype(vb.dtype), vb).astype(jnp.float32)
+            acc = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+            m = m_new
+        denom = jnp.maximum(l, 1e-37).transpose(0, 3, 1, 2)[..., None]
+        out_blocks.append((acc / denom).astype(q.dtype))
+    out = jnp.concatenate(out_blocks, axis=1)
+    return out[:, :s] if qpad else out
+
+
+def gqa_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    impl: str = "naive",
+    chunk: int = 1024,
+    sm_dtype=jnp.float32,
+) -> jax.Array:
+    """Grouped-query attention.  q: (B,S,H,d), k/v: (B,T,K,d) -> (B,S,H,d)."""
+    b, s, h, d = q.shape
+    n_kv = k.shape[2]
+    qg = _split_gqa(q, n_kv)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(qg, k, v, causal=causal, q_offset=q_offset)
+    elif impl == "chunked":
+        out = _chunked_attention(qg, k, v, causal=causal, q_offset=q_offset, chunk=chunk, sm_dtype=sm_dtype)
+    else:
+        out = _naive_attention(qg, k, v, causal=causal, q_offset=q_offset)
+    return out.reshape(b, s, h, d)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, length: jax.Array) -> jax.Array:
+    """Single-position attention against a cache.
+
+    q: (B,1,H,d); k/v_cache: (B,T,K,d); length: () or (B,) valid lengths —
+    per-row lengths support continuous batching (rows at different depths).
+    """
+    b, _, h, d = q.shape
+    n_kv = k_cache.shape[2]
+    qg = _split_gqa(q, n_kv)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache).astype(jnp.float32) * scale
+    t = k_cache.shape[1]
+    length = jnp.broadcast_to(jnp.asarray(length), (b,))
+    valid = jnp.arange(t)[None, None, None, None, :] < length[:, None, None, None, None]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v_cache)
+    return out.reshape(b, 1, h, d)

@@ -1,0 +1,55 @@
+"""Layer-stack scan with an unrollable escape hatch.
+
+``lax.scan`` keeps HLO compact (essential at 80 layers), but XLA's
+cost_analysis counts a while-loop body ONCE regardless of trip count.  The
+roofline probes therefore lower small UNROLLED variants (scan_layers=False)
+to measure exact per-layer FLOPs/bytes/collectives and scale analytically —
+see repro/roofline/probes.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["layer_scan", "maybe_cond"]
+
+
+def layer_scan(body, carry, xs, *, unroll: bool = False, length: int | None = None):
+    """scan(body, carry, xs) with optional Python-loop unrolling.
+
+    In unrolled mode the per-iteration index (if `xs` contains one) arrives
+    as a concrete Python int so `maybe_cond` can prune untaken branches.
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length
+    if n is None:
+        n = jax.tree.leaves(xs)[0].shape[0]
+    ys_acc = []
+    for i in range(n):
+        xi = jax.tree.map(lambda x: _index(x, i), xs)
+        carry, y = body(carry, xi)
+        ys_acc.append(y)
+    if ys_acc and ys_acc[0] is not None:
+        ys = jax.tree.map(lambda *ls: jnp.stack(ls), *ys_acc)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _index(x, i: int):
+    if isinstance(x, jnp.ndarray) or hasattr(x, "shape"):
+        return x[i]
+    return x
+
+
+def maybe_cond(pred, true_fn, false_fn, operand):
+    """lax.cond that prunes statically-known branches (unrolled probes)."""
+    if isinstance(pred, bool):
+        return true_fn(operand) if pred else false_fn(operand)
+    try:
+        concrete = bool(pred)  # works for concrete tracers / numpy scalars
+        return true_fn(operand) if concrete else false_fn(operand)
+    except (jax.errors.TracerBoolConversionError, TypeError):
+        return jax.lax.cond(pred, true_fn, false_fn, operand)

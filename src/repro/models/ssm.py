@@ -1,0 +1,178 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+Chunked SSD algorithm (arXiv:2405.21060): intra-chunk quadratic term +
+inter-chunk linear recurrence over chunk states.  ``ssd_chunked`` is the
+pure-jnp implementation (also the oracle for the Pallas kernel in
+``repro.kernels.ssd_scan``); ``mamba_mixer`` wraps projections, causal
+conv, gating and output norm; ``mamba_decode_step`` is the O(1) stateful
+recurrence used by serve_step.
+
+Projections are kept as separate weights (w_z/w_x/w_B/w_C/w_dt and
+per-stream convs) so tensor parallelism shards the ``ssm_inner``/
+``ssm_heads`` axes without splitting a fused matrix.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from .ops import rms_norm
+
+__all__ = ["ssd_chunked", "causal_conv1d", "mamba_mixer", "mamba_decode_step", "init_ssm_state"]
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)  positive (softplus already applied)
+    A: jax.Array,      # (H,)       negative
+    B_: jax.Array,     # (B, S, N)
+    C_: jax.Array,     # (B, S, N)
+    D_: jax.Array,     # (H,)
+    chunk: int = 256,
+    h0: jax.Array | None = None,  # (B, H, P, N) initial state
+    return_state: bool = False,
+):
+    """y_t = C_t · h_t + D·x_t with h_t = exp(dt_t A) h_{t-1} + dt_t x_t⊗B_t."""
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bc = B_.reshape(b, nc, q, n)
+    Cc = C_.reshape(b, nc, q, n)
+
+    la = dtc * A.astype(jnp.float32)            # (B,nc,Q,H) log-decay ≤ 0
+    cum = jnp.cumsum(la, axis=2)                # inclusive
+    total = cum[:, :, -1, :]                    # (B,nc,H)
+
+    # ---- intra-chunk (quadratic within chunk) -----------------------------
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    ii = jnp.arange(q)
+    mask = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # mask the exponent BEFORE exp: exp of a positive (i<j) difference would
+    # overflow to inf and poison gradients through the where
+    expnt = jnp.where(mask, cum[:, :, :, None, :] - cum[:, :, None, :, :], -jnp.inf)
+    decay = jnp.exp(expnt)  # (B,nc,Qi,Qj,H)
+    scores = cb[..., None] * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores.astype(x.dtype), xc)
+
+    # ---- chunk states ------------------------------------------------------
+    w = jnp.exp(total[:, :, None, :] - cum) * dtc          # (B,nc,Q,H)
+    states = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", w.astype(x.dtype), xc, Bc)
+
+    # ---- inter-chunk recurrence over c ------------------------------------
+    def step(hprev, inp):
+        st, tot = inp  # (B,H,P,N), (B,H)
+        hnew = jnp.exp(tot)[..., None, None].astype(hprev.dtype) * hprev + st.astype(hprev.dtype)
+        return hnew, hprev  # emit state ENTERING the chunk
+
+    init = h0.astype(jnp.float32) if h0 is not None else jnp.zeros((b, h, p, n), jnp.float32)
+    hlast, hprevs = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32), total.transpose(1, 0, 2))
+    )
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp",
+        Cc.astype(jnp.float32),
+        hprevs,
+        jnp.exp(cum),
+    ).astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p) + x * D_.astype(x.dtype)[None, None, :, None]
+    if return_state:
+        return y, hlast
+    return y
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C), w: (K,C) -> (B,S,C), silu applied."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp,
+        w[:, None, :].astype(x.dtype),  # (K, 1, C): spatial, in/group, feature
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return jax.nn.silu(out + bias.astype(x.dtype))
+
+
+def _project(x: jax.Array, params: dict):
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"])
+    xin = jnp.einsum("bsd,de->bse", x, params["w_x"])
+    B_ = jnp.einsum("bsd,dn->bsn", x, params["w_B"])
+    C_ = jnp.einsum("bsd,dn->bsn", x, params["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["w_dt"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    return z, xin, B_, C_, dt
+
+
+def mamba_mixer(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence Mamba2 block (train / prefill).  x: (B,S,D) -> (B,S,D)."""
+    b, s, _ = x.shape
+    di, n, hds, p = cfg.d_inner, cfg.ssm.d_state, cfg.ssm_heads, cfg.ssm.head_dim
+    z, xin, B_, C_, dt = _project(x, params)
+    xin = causal_conv1d(xin, params["conv_x"], params["conv_x_b"])
+    B_ = causal_conv1d(B_, params["conv_B"], params["conv_B_b"])
+    C_ = causal_conv1d(C_, params["conv_C"], params["conv_C_b"])
+    xh = xin.reshape(b, s, hds, p)
+    xh = constrain(xh, "batch", "seq", "ssm_heads", None)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.ssd_scan import ops as ssd_ops
+
+        y = ssd_ops.ssd_scan(xh, dt, A, B_, C_, params["D_skip"], chunk=cfg.ssm.chunk)
+    else:
+        y = ssd_chunked(xh, dt, A, B_, C_, params["D_skip"], chunk=cfg.ssm.chunk)
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di, n = cfg.d_inner, cfg.ssm.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di + 2 * n), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm.head_dim, n), jnp.float32),
+    }
+
+
+def mamba_decode_step(x: jax.Array, state: dict, params: dict, cfg: ModelConfig):
+    """One-token recurrent step.  x: (B,1,D) -> (y (B,1,D), new state)."""
+    b = x.shape[0]
+    di, n, hds, p = cfg.d_inner, cfg.ssm.d_state, cfg.ssm_heads, cfg.ssm.head_dim
+    z, xin, B_, C_, dt = _project(x, params)
+    conv_in = jnp.concatenate([xin, B_, C_], axis=-1)  # (B,1,di+2n)
+    window = jnp.concatenate([state["conv"], conv_in], axis=1)  # (B,K,di+2n)
+    w_full = jnp.concatenate(
+        [params["conv_x"], params["conv_B"], params["conv_C"]], axis=-1
+    ).astype(x.dtype)  # (K, di+2n)
+    b_full = jnp.concatenate(
+        [params["conv_x_b"], params["conv_B_b"], params["conv_C_b"]], axis=-1
+    ).astype(x.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w_full) + b_full)[:, None, :]
+    new_conv = window[:, 1:, :]
+    xin, B_, C_ = jnp.split(conv_out, [di, di + n], axis=-1)
+    xh = xin.reshape(b, hds, p)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt1 = dt[:, 0, :]  # (B,H)
+    decay = jnp.exp(dt1 * A)  # (B,H)
+    h = state["ssm"]
+    h_new = decay[..., None, None] * h + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt1, xh.astype(jnp.float32), B_[:, 0].astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h_new, C_[:, 0].astype(jnp.float32)).astype(x.dtype)
+    y = y + xh * params["D_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"conv": new_conv, "ssm": h_new}

@@ -1,0 +1,3 @@
+from .analysis import HW, RooflineReport, model_flops_for, parse_collectives, roofline
+
+__all__ = ["HW", "RooflineReport", "model_flops_for", "parse_collectives", "roofline"]

@@ -1,0 +1,157 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+Hardware model (TPU v5e class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+    compute_s    = HLO_FLOPs / (chips · peak)
+    memory_s     = HLO_bytes / (chips · hbm_bw)
+    collective_s = collective_wire_bytes / (chips · link_bw)
+
+cost_analysis() on the partitioned module reports per-device FLOPs/bytes, so
+per-device terms equal the global formula (both numerator and denominator
+scale by `chips`).  Collective bytes are parsed from the compiled
+(post-GSPMD) HLO text with a symbol table so operand shapes are exact;
+wire-byte convention per op (ring algorithms):
+
+    all-reduce         2 × operand bytes
+    all-gather         result bytes
+    reduce-scatter     operand bytes
+    all-to-all         operand bytes
+    collective-permute operand bytes
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter
+from dataclasses import dataclass, field
+
+__all__ = ["HW", "parse_collectives", "roofline", "RooflineReport"]
+
+HW = {
+    "peak_flops": 197e12,   # bf16 / chip
+    "hbm_bw": 819e9,        # B/s / chip
+    "ici_bw": 50e9,         # B/s / link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|f32|s32|u32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\(")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective op, from partitioned HLO text."""
+    # symbol table: instruction name -> result bytes
+    sizes: dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            name, type_str, _op = m.groups()
+            sizes[name] = _type_bytes(type_str)
+
+    wire = Counter()
+    counts = Counter()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        # operand list: names inside the outermost parens
+        paren = ln[ln.index(op) + len(op):]
+        operand_names = re.findall(r"%?([\w.\-]+)(?:,|\))", paren.split("），")[0])
+        operand_bytes = sum(sizes.get(n, 0) for n in operand_names if n in sizes)
+        result_bytes = _type_bytes(type_str)
+        if operand_bytes == 0:
+            operand_bytes = result_bytes
+        if base == "all-reduce":
+            b = 2 * operand_bytes
+        elif base == "all-gather":
+            b = result_bytes
+        else:
+            b = operand_bytes
+        wire[base] += b
+        counts[base] += 1
+    return {"bytes_by_op": dict(wire), "counts": dict(counts), "total_bytes": sum(wire.values())}
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    collective_bytes: float     # per device wire bytes
+    model_flops: float          # global useful FLOPs (6ND / 2ND)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+    collectives: dict = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in self.__dataclass_fields__}
+
+
+def roofline(
+    *,
+    arch: str,
+    shape: str,
+    mesh: str,
+    chips: int,
+    cost: dict,
+    collectives: dict,
+    model_flops: float,
+) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    coll_bytes = float(collectives.get("total_bytes", 0.0))
+    compute_s = flops / HW["peak_flops"]
+    memory_s = raw_bytes / HW["hbm_bw"]
+    collective_s = coll_bytes / HW["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / max(flops * chips, 1.0)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops=flops, hlo_bytes=raw_bytes, collective_bytes=coll_bytes,
+        model_flops=model_flops,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, useful_ratio=useful, collectives=collectives,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Useful FLOPs per step: 6·N_active·tokens (train), 2·N_active·tokens (serve)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,140 @@
+"""Batched serving engine: slot-based continuous batching over a shared
+KV/SSM cache.
+
+The decode loop always steps a FULL (B, 1) batch against the shared cache —
+the same `decode_step` the decode_32k/long_500k dry-run cells lower.  New
+requests are prefilled individually (batch=1) and their cache written into a
+free slot mid-flight, so long generations never block admission (continuous
+batching).  Completed slots free immediately.
+
+This is the I/O-plane consumer story of the paper transplanted to serving:
+producers (prefills) and consumers (decodes) interleave against shared
+state without a global barrier.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache, prefill
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    rid: int = field(default_factory=itertools.count().__next__)
+    # filled by the engine:
+    generated: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _insert_slot(batch_cache, single_cache, slot: int):
+    """Write a batch=1 cache into slot `slot` of the shared batch cache.
+
+    Cache leaves are either (L, B, ...) — batch axis 1 — or (B, ...) —
+    batch axis 0; the single cache has extent 1 on that axis.
+    """
+    out = {}
+    for k, b in batch_cache.items():
+        if k == "pos":
+            out[k] = b
+            continue
+        s = single_cache[k]
+        axis = 1 if (b.ndim >= 3 and s.shape[0] == b.shape[0] and s.shape[1] == 1) else 0
+        idx = [0] * b.ndim
+        idx[axis] = slot
+        out[k] = jax.lax.dynamic_update_slice(b, s.astype(b.dtype), tuple(idx))
+    return out
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 4, cache_len: int = 256):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.cache = init_cache(cfg, max_batch, cache_len)
+        # per-slot state (host side)
+        self.slot_req: list[Request | None] = [None] * max_batch
+        self.slot_pos = np.zeros(max_batch, np.int32)         # next position per slot
+        self.last_token = np.zeros((max_batch, 1), np.int32)
+        self._queue: list[Request] = []
+        self._done: list[Request] = []
+
+        self._prefill1 = jax.jit(lambda p, t, c: prefill(p, cfg, t, c))
+        self._step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        """Drive until queue + slots drain; returns completed requests."""
+        for _ in range(max_steps):
+            self._admit()
+            if self.active == 0 and not self._queue:
+                break
+            self._decode_once()
+        return self._done
+
+    # ------------------------------------------------------------- internals
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self._queue:
+                continue
+            req = self._queue.pop(0)
+            plen = len(req.prompt)
+            if plen + req.max_new_tokens > self.cache_len:
+                raise ValueError(f"request {req.rid} exceeds cache_len")
+            # batch=1 prefill, then graft into the shared cache at `slot`
+            c1 = init_cache(self.cfg, 1, self.cache_len)
+            logits, c1 = self._prefill1(self.params, jnp.asarray(req.prompt)[None, :], c1)
+            nxt = int(jnp.argmax(logits[0, : self.cfg.vocab]))
+            self.cache = _insert_slot(self.cache, c1, slot)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = plen
+            self.last_token[slot, 0] = nxt
+            req.generated.append(nxt)
+
+    def _decode_once(self) -> None:
+        if self.active == 0:
+            return
+        # decode_step takes PER-ROW positions: every active slot advances at
+        # its own depth in one batched step (true continuous batching);
+        # free slots re-write their stale position (harmless — their rows
+        # are replaced wholesale at the next admit)
+        cache = {**self.cache, "pos": jnp.asarray(self.slot_pos)}
+        logits, cache = self._step(self.params, jnp.asarray(self.last_token), cache)
+        self.cache = cache
+        new_pos = np.asarray(cache["pos"])
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(jnp.argmax(logits[slot, : self.cfg.vocab]))
+            self.slot_pos[slot] = new_pos[slot]
+            done = (
+                len(req.generated) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id)
+                or int(new_pos[slot]) >= self.cache_len - 1
+            )
+            if done:
+                req.done = True
+                self._done.append(req)
+                self.slot_req[slot] = None
+            else:
+                req.generated.append(tok)
+                self.last_token[slot, 0] = tok

@@ -1,0 +1,3 @@
+from .cluster import SimResult, Workload, simulate
+
+__all__ = ["SimResult", "Workload", "simulate"]

@@ -1,0 +1,6 @@
+from .optimizer import OptState, adamw_step, global_norm, init_opt_state, lr_schedule
+
+__all__ = ["OptState", "adamw_step", "global_norm", "init_opt_state", "lr_schedule"]
+from .loop import SimulatedFailure, Trainer
+
+__all__ += ["SimulatedFailure", "Trainer"]

@@ -1,0 +1,93 @@
+"""AdamW from scratch (no optax in-container) with mixed-precision policy.
+
+- model params live in bf16 (compute dtype);
+- fp32 master copy + fp32 first/second moments (ZeRO-1-shardable over the
+  `data` axis — see repro.distributed.zero);
+- gradients arrive in the param dtype (bf16) so the data-parallel
+  all-reduce moves half the bytes (the gradient-compression trick),
+  and are promoted to fp32 only for the local optimizer math;
+- global-norm clipping, decoupled weight decay, cosine LR with warmup.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+__all__ = ["OptState", "init_opt_state", "adamw_step", "lr_schedule", "global_norm"]
+
+
+class OptState(NamedTuple):
+    master: dict  # fp32 master params
+    m: dict       # fp32 first moment
+    v: dict       # fp32 second moment
+    step: jax.Array
+
+
+def init_opt_state(params: dict) -> OptState:
+    # copy=True: fp32 params must not alias the master buffer (donation)
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def abstract_opt_state(params_abstract: dict) -> OptState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return OptState(
+        master=jax.tree.map(f32, params_abstract),
+        m=jax.tree.map(f32, params_abstract),
+        v=jax.tree.map(f32, params_abstract),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def lr_schedule(step: jax.Array, hp: TrainConfig) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(hp.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - hp.warmup_steps) / jnp.maximum(hp.total_steps - hp.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return hp.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def adamw_step(grads: dict, params: dict, opt: OptState, hp: TrainConfig):
+    """Returns (new params in model dtype, new OptState, metrics)."""
+    step = opt.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, hp.grad_clip / jnp.maximum(gnorm, 1e-9)) if hp.grad_clip else 1.0
+    lr = lr_schedule(step, hp)
+    b1, b2, eps, wd = hp.b1, hp.b2, hp.eps, hp.weight_decay
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, master, m, v):
+        g32 = g.astype(jnp.float32) * clip
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        # decoupled weight decay only on matrices (ndim >= 2)
+        decay = wd * master if master.ndim >= 2 else 0.0
+        master_new = master - lr * (mhat / (jnp.sqrt(vhat) + eps) + decay)
+        return master_new, m_new, v_new
+
+    out = jax.tree.map(upd, grads, opt.master, opt.m, opt.v)
+    master = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+    return new_params, OptState(master, m, v, step), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,59 @@
+"""Minimal property-based testing helper (hypothesis is not installed in
+this container — the offline stand-in keeps the same discipline: many
+seeded random cases, failing seed reported for reproduction).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import numpy as np
+
+__all__ = ["forall", "Rand"]
+
+N_CASES = int(os.environ.get("PROPTEST_CASES", "25"))
+
+
+class Rand:
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+
+    def int(self, lo: int, hi: int) -> int:
+        return int(self.rng.integers(lo, hi + 1))
+
+    def choice(self, xs):
+        return xs[self.int(0, len(xs) - 1)]
+
+    def token(self, n: int = 8) -> str:
+        alphabet = "abcdefghijklmnopqrstuvwxyz0123456789"
+        return "".join(self.choice(alphabet) for _ in range(self.int(1, n)))
+
+    def bytes(self, max_len: int = 256) -> bytes:
+        return self.rng.bytes(self.int(0, max_len))
+
+    def floats(self, shape, scale: float = 100.0) -> np.ndarray:
+        return (self.rng.standard_normal(shape) * scale).astype(np.float32)
+
+    def shape(self, ndim_max: int = 4, dim_max: int = 64) -> tuple[int, ...]:
+        return tuple(self.int(1, dim_max) for _ in range(self.int(1, ndim_max)))
+
+
+def forall(n_cases: int = N_CASES):
+    """Decorator: run `fn(rand: Rand)` for n seeded cases."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            for seed in range(n_cases):
+                try:
+                    fn(*args, Rand(seed), **kw)
+                except AssertionError as e:
+                    raise AssertionError(f"[proptest seed={seed}] {e}") from e
+
+        # pytest must not see the wrapped signature (it would treat the
+        # injected `r: Rand` argument as a fixture)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

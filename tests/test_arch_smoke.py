@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train-grad step + one prefill/decode on CPU; asserts shapes and no NaNs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, get_config, reduced
+from repro.models import (
+    decode_step,
+    init_cache,
+    init_params,
+    logical_axes,
+    prefill,
+    train_loss,
+)
+
+B, S = 2, 64
+
+
+def make_batch(cfg, key):
+    kt, ke = jax.random.split(key)
+    batch = {"targets": jax.random.randint(kt, (B, S), 0, cfg.vocab)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(ke, (B, S, cfg.d_model), jnp.float32)
+        batch["tokens"] = jax.random.randint(kt, (B, S), 0, cfg.vocab)
+    elif cfg.input_kind == "patches":
+        batch["embeds"] = jax.random.normal(ke, (B, S, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(kt, (B, S), 0, cfg.vocab)
+    return batch
+
+
+@pytest.fixture(scope="module", params=sorted(ARCHS))
+def arch_setup(request):
+    cfg = reduced(get_config(request.param))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    return cfg, params, make_batch(cfg, jax.random.PRNGKey(1))
+
+
+class TestSmoke:
+    def test_loss_finite(self, arch_setup):
+        cfg, params, batch = arch_setup
+        loss, metrics = jax.jit(lambda p, b: train_loss(p, cfg, b))(params, batch)
+        assert np.isfinite(float(loss)), f"{cfg.name}: loss not finite"
+        assert float(loss) > 0
+
+    def test_grad_step_no_nan(self, arch_setup):
+        cfg, params, batch = arch_setup
+        grads, _ = jax.jit(jax.grad(lambda p, b: train_loss(p, cfg, b)[0], has_aux=False), static_argnums=())(
+            params, batch
+        ), None
+        flat, _ = jax.tree.flatten(grads)
+        for g in flat:
+            assert np.all(np.isfinite(np.asarray(g))), f"{cfg.name}: NaN/inf grad"
+
+    def test_param_shapes_match_logical_axes(self, arch_setup):
+        cfg, params, _ = arch_setup
+        axes = logical_axes(cfg)
+        pleaves = jax.tree.leaves(params)
+        aleaves = jax.tree.leaves(axes, is_leaf=lambda v: isinstance(v, tuple))
+        assert len(pleaves) == len(aleaves)
+        for p, a in zip(pleaves, aleaves):
+            assert p.ndim == len(a), f"{cfg.name}: {p.shape} vs logical {a}"
+
+    def test_prefill_decode_consistency(self, arch_setup):
+        """Greedy logits from (prefill + decode) must match full-seq forward."""
+        cfg, params, batch = arch_setup
+        if cfg.input_kind == "patches":
+            pytest.skip("decode-on-embeds covered by dense path")
+        s0 = 16
+        tokens = batch["tokens"][:, :s0]
+        cache = init_cache(cfg, B, cache_len=32, enc_len=S if cfg.is_encoder_decoder else 0)
+        kw = {"enc_frames": batch["frames"]} if cfg.is_encoder_decoder else {}
+        logits_pf, cache = jax.jit(lambda p, t, c: prefill(p, cfg, t, c, **kw))(params, tokens, cache)
+        assert logits_pf.shape == (B, cfg.padded_vocab)
+        assert np.all(np.isfinite(np.asarray(logits_pf, np.float32)))
+        # decode two tokens
+        nxt = jnp.argmax(logits_pf[:, : cfg.vocab], axis=-1).astype(jnp.int32)[:, None]
+        step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+        logits_d, cache = step(params, nxt, cache)
+        assert logits_d.shape == (B, cfg.padded_vocab)
+        assert np.all(np.isfinite(np.asarray(logits_d, np.float32)))
+        assert int(np.asarray(cache["pos"])[0]) == s0 + 1
+        logits_d2, cache = step(params, jnp.argmax(logits_d[:, : cfg.vocab], -1).astype(jnp.int32)[:, None], cache)
+        assert np.all(np.isfinite(np.asarray(logits_d2, np.float32)))
+
+
+def test_assigned_list_complete():
+    assert len(ASSIGNED) == 10
+    expected = {
+        "zamba2-7b", "granite-moe-3b-a800m", "phi3.5-moe-42b-a6.6b", "whisper-tiny",
+        "mamba2-370m", "internlm2-20b", "phi3-mini-3.8b", "qwen2.5-3b", "yi-34b", "internvl2-76b",
+    }
+    assert set(ASSIGNED) == expected
+
+
+def test_full_config_param_counts_plausible():
+    """Analytic N within the advertised ballpark for the named sizes."""
+    expect = {
+        "zamba2-7b": (6e9, 9.5e9),
+        "granite-moe-3b-a800m": (2.5e9, 4.5e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+        "mamba2-370m": (3e8, 4.5e8),
+        "internlm2-20b": (17e9, 23e9),
+        "phi3-mini-3.8b": (3.3e9, 4.3e9),
+        "qwen2.5-3b": (2.6e9, 4e9),
+        "yi-34b": (30e9, 38e9),
+        "internvl2-76b": (65e9, 80e9),
+        "whisper-tiny": (2e7, 6e7),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).param_count()
+        assert lo <= n <= hi, f"{name}: N={n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]B"
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    assert cfg.active_param_count() < cfg.param_count()
+    # a6.6b: active ≈ 6.6B
+    assert 5e9 <= cfg.active_param_count() <= 9e9

@@ -1,0 +1,192 @@
+"""Property-based tests over the system's invariants (see proptest.py)."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from proptest import Rand, forall
+
+from repro.core import FDB, Key, NWP_SCHEMA_DAOS, NWP_SCHEMA_POSIX, make_fdb
+from repro.core.daos import DaosEngine
+from repro.core.daos.objects import ArrayObject, KVObject, ObjectId
+
+
+class TestKeyProperties:
+    @forall()
+    def test_canonical_roundtrip(self, r: Rand):
+        pairs = {r.token(): r.token() for _ in range(r.int(1, 8))}
+        k = Key(pairs)
+        assert Key.from_canonical(k.canonical()) == k
+
+    @forall()
+    def test_stringify_destringify_with_schema_order(self, r: Rand):
+        kws = [f"k{i}" for i in range(r.int(1, 6))]
+        k = Key({kw: r.token() for kw in kws})
+        s = k.stringify()
+        assert Key.destringify(s, kws) == k
+
+    @forall()
+    def test_schema_split_union_is_identity(self, r: Rand):
+        vals = {kw: r.token() for kw in NWP_SCHEMA_DAOS.all_keys}
+        k = Key(vals)
+        split = NWP_SCHEMA_DAOS.split(k)
+        assert split.full() == k
+
+
+class TestMVCCProperties:
+    @forall()
+    def test_kv_last_write_wins_and_versions_accumulate(self, r: Rand):
+        kv = KVObject(ObjectId(0, 1))
+        key = r.token()
+        values = [r.bytes(64) for _ in range(r.int(1, 10))]
+        for v in values:
+            kv.put(key, v)
+        assert kv.get(key) == values[-1]
+        assert kv.version_count(key) == len(values)
+
+    @forall(n_cases=10)
+    def test_concurrent_puts_result_is_some_put_value(self, r: Rand):
+        kv = KVObject(ObjectId(0, 1))
+        values = [bytes([i]) * 16 for i in range(8)]
+
+        def put(v):
+            kv.put("k", v)
+
+        ts = [threading.Thread(target=put, args=(v,)) for v in values]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert kv.get("k") in values
+        assert kv.version_count("k") == len(values)
+
+    @forall()
+    def test_array_extents_match_numpy_overlay(self, r: Rand):
+        arr = ArrayObject(ObjectId(1, 1))
+        size = r.int(16, 512)
+        ref = np.zeros(size, dtype=np.uint8)
+        for _ in range(r.int(1, 12)):
+            off = r.int(0, size - 1)
+            data = bytes(r.rng.integers(1, 255, size=r.int(1, size - off), dtype=np.uint8))
+            arr.write(off, data)
+            ref[off : off + len(data)] = np.frombuffer(data, np.uint8)
+        got = np.frombuffer(arr.read(0, arr.get_size()), np.uint8)
+        np.testing.assert_array_equal(got, ref[: arr.get_size()])
+
+
+class TestFDBProperties:
+    @forall(n_cases=8)
+    def test_archive_flush_read_and_list_consistency(self, r: Rand, tmp_path_factory=None):
+        backend = r.choice(["daos", "posix"])
+        if backend == "daos":
+            fdb = make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=DaosEngine())
+        else:
+            import tempfile
+
+            td = tempfile.mkdtemp()
+            fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=td)
+        fields: dict[Key, bytes] = {}
+        for _ in range(r.int(1, 24)):
+            k = Key(
+                {"class": "od", "stream": "oper", "expver": "1", "date": "20240101",
+                 "time": "0000", "type": "ef", "levtype": "sfc",
+                 "number": str(r.int(0, 3)), "levelist": str(r.int(0, 3)),
+                 "step": str(r.int(0, 5)), "param": r.choice(["t", "u", "v", "q"])}
+            )
+            payload = r.bytes(128) or b"x"
+            fields[k] = payload  # replacement: dict mirrors last-write-wins
+            fdb.archive(k, payload)
+        fdb.flush()
+        # every identifier reads back its LAST archived payload
+        for k, v in fields.items():
+            assert fdb.read(k) == v
+        # list({}) enumerates exactly the distinct identifiers
+        listed = {e.key for e in fdb.list({})}
+        assert listed == set(fields)
+
+    @forall(n_cases=8)
+    def test_partial_request_listing_equals_filter(self, r: Rand):
+        fdb = make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=DaosEngine())
+        keys = []
+        for step in range(3):
+            for param in ("t", "u"):
+                for num in range(2):
+                    k = Key(
+                        {"class": "od", "stream": "oper", "expver": "1", "date": "20240101",
+                         "time": "0000", "type": "ef", "levtype": "sfc",
+                         "number": str(num), "levelist": "0", "step": str(step), "param": param}
+                    )
+                    keys.append(k)
+                    fdb.archive(k, b"p")
+        fdb.flush()
+        req = {}
+        if r.int(0, 1):
+            req["step"] = [str(r.int(0, 2))]
+        if r.int(0, 1):
+            req["param"] = r.choice([["t"], ["u"], ["t", "u"]])
+        expected = {k for k in keys if k.matches(req)}
+        assert {e.key for e in fdb.list(req)} == expected
+
+
+class TestShardingProperties:
+    @forall()
+    def test_zero_shard_spec_preserves_validity(self, r: Rand):
+        import os
+
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.zero import zero_shard_spec
+
+        if jax.device_count() < 1:
+            pytest.skip("no devices")
+        mesh = jax.make_mesh((1,), ("data",))
+        shape = tuple(r.choice([1, 2, 3, 8, 16, 64]) for _ in range(r.int(1, 3)))
+        spec = P(*([None] * len(shape)))
+        out = zero_shard_spec(spec, shape, mesh, axis="data")
+        # with data=1, spec must be unchanged (no spurious sharding)
+        assert out == spec
+
+    def test_zero_shard_adds_data_axis_when_divisible(self):
+        import subprocess
+        import sys
+        import os
+
+        script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.distributed.zero import zero_shard_spec
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+# unsharded dim divisible by data=4 -> gains 'data'
+assert zero_shard_spec(P(None, "model"), (16, 8), mesh) == P("data", "model")
+# dim already sharded by model, divisible by model*data -> composes
+assert zero_shard_spec(P("model", None), (64, 3), mesh) == P(("model", "data"), None)
+# nothing divisible -> unchanged
+assert zero_shard_spec(P(None,), (3,), mesh) == P(None,)
+print("ZERO_OK")
+"""
+        r = subprocess.run(
+            [sys.executable, "-c", script], capture_output=True, text=True, timeout=240,
+            env={**os.environ, "PYTHONPATH": "src"},
+        )
+        assert "ZERO_OK" in r.stdout, r.stdout + r.stderr
+
+
+class TestGribProperties:
+    @forall(n_cases=10)
+    def test_pack_error_within_quantum(self, r: Rand):
+        import jax.numpy as jnp
+
+        from repro.kernels.grib_pack.ref import field_stats, pack_ref, unpack_ref
+
+        shape = (1, r.choice([8, 16, 32]), r.choice([64, 128]))
+        x = jnp.asarray(r.floats(shape, scale=r.choice([0.1, 1.0, 100.0, 1e4])))
+        lo, scale, inv = field_stats(x)
+        codes = pack_ref(x, lo, inv)
+        back = unpack_ref(codes, lo, scale)
+        quantum = (x.max() - x.min()) / 65535
+        assert float(jnp.abs(back - x).max()) <= float(quantum) * 1.01 + 1e-12
