@@ -6,24 +6,48 @@ processes in tests).  Each process writes/reads an independent stream of
 fields for a distinct ensemble member, mimicking the I/O-server and
 post-processing patterns.  "I/O pessimised": all computation removed.
 
+The same spec can be run through four I/O paths:
+
+- ``io='sync'``     one synchronous round-trip per field (the seed path);
+- ``io='batched'``  one ``archive_batch``/``read_batch`` per output step —
+                    the backends amortise locks / OID allocation / event-
+                    queue drains across the batch;
+- ``io='async'``    each process drives an :class:`AsyncFDB` — a bounded
+                    background writer pool keeps many fields in flight, and
+                    retrieval fans a MARS-style request out in parallel;
+- ``lanes=N``       shard datasets across an N-lane :class:`FDBRouter`
+                    (set ``n_datasets > 1`` so there is something to shard).
+
 Bandwidths use *global timing* (paper §4.3): total bytes / (last I/O end −
 first I/O start).
+
+    PYTHONPATH=src python benchmarks/fdb_hammer.py --procs 4
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
-from repro.core import FDB, Key, NWP_SCHEMA_DAOS, NWP_SCHEMA_POSIX, make_fdb
+from repro.core import (
+    AsyncFDB,
+    FDB,
+    Key,
+    NWP_SCHEMA_DAOS,
+    NWP_SCHEMA_POSIX,
+    make_fdb,
+    make_router,
+)
 from repro.core.daos import DaosEngine
 
 __all__ = ["HammerSpec", "run_hammer", "make_backend"]
 
 GiB = float(1 << 30)
+
+IO_MODES = ("sync", "batched", "async")
 
 
 @dataclass(frozen=True)
@@ -33,6 +57,8 @@ class HammerSpec:
     n_params: int = 5
     n_levels: int = 4
     field_size: int = 1 << 16
+    io: str = "sync"       # 'sync' | 'batched' | 'async'
+    n_datasets: int = 1    # distinct forecast runs (router lanes shard these)
 
     @property
     def fields_per_proc(self) -> int:
@@ -43,51 +69,95 @@ class HammerSpec:
         return self.n_procs * self.fields_per_proc * self.field_size
 
 
-def make_backend(backend: str, root: str | None = None, engine: DaosEngine | None = None) -> FDB:
+def make_backend(
+    backend: str,
+    root: str | None = None,
+    engine: DaosEngine | None = None,
+    *,
+    lanes: int = 1,
+):
+    """Build the FDB under test: a single-lane FDB, or an N-lane router."""
+    if backend not in ("daos", "posix"):
+        raise ValueError(f"unknown backend {backend!r}; pick 'daos' or 'posix'")
+    schema = NWP_SCHEMA_DAOS if backend == "daos" else NWP_SCHEMA_POSIX
+    if lanes > 1:
+        if backend == "daos":
+            return make_router("daos", lanes, schema=schema, engine=engine or DaosEngine())
+        return make_router("posix", lanes, schema=schema, root=root)
     if backend == "daos":
-        return make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=engine or DaosEngine())
-    return make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=root)
+        return make_fdb("daos", schema=schema, engine=engine or DaosEngine())
+    return make_fdb("posix", schema=schema, root=root)
 
 
-def _field_key(member: int, step: int, param: int, level: int) -> Key:
+def _field_key(member: int, step: int, param: int, level: int, n_datasets: int = 1) -> Key:
+    date = str(20240601 + member % max(1, n_datasets))
     return Key(
-        {"class": "rd", "stream": "oper", "expver": "0001", "date": "20240603", "time": "0000",
+        {"class": "rd", "stream": "oper", "expver": "0001", "date": date, "time": "0000",
          "type": "ef", "levtype": "ml", "number": str(member), "levelist": str(level),
          "step": str(step), "param": str(130 + param)}
     )
 
 
-def run_hammer(fdb: FDB, spec: HammerSpec, mode: str) -> dict:
+def _step_keys(spec: HammerSpec, member: int, step: int) -> list[Key]:
+    return [
+        _field_key(member, step, param, level, spec.n_datasets)
+        for param in range(spec.n_params)
+        for level in range(spec.n_levels)
+    ]
+
+
+def run_hammer(fdb, spec: HammerSpec, mode: str) -> dict:
     """mode: 'archive' | 'retrieve' | 'list'.  Returns timings + bandwidth."""
+    if spec.io not in IO_MODES:
+        raise ValueError(f"unknown io mode {spec.io!r}; pick one of {IO_MODES}")
     payload = np.random.default_rng(0).bytes(spec.field_size)
     starts = [0.0] * spec.n_procs
     ends = [0.0] * spec.n_procs
     errors: list[Exception] = []
 
     def proc(member: int) -> None:
+        handle = fdb
+        if spec.io == "async":
+            # one async facade per "process", as the I/O servers would hold
+            handle = AsyncFDB(fdb, writers=2, batch_size=16)
         try:
             t0 = time.perf_counter()
             if mode == "archive":
                 for step in range(spec.n_steps):
-                    for param in range(spec.n_params):
-                        for level in range(spec.n_levels):
-                            fdb.archive(_field_key(member, step, param, level), payload)
-                    fdb.flush()  # once per output step, as the I/O servers do
+                    if spec.io == "batched":
+                        handle.archive_batch([(k, payload) for k in _step_keys(spec, member, step)])
+                    else:  # sync round-trips, or async enqueues to the pool
+                        for k in _step_keys(spec, member, step):
+                            handle.archive(k, payload)
+                    handle.flush()  # once per output step, as the I/O servers do
             elif mode == "retrieve":
                 for step in range(spec.n_steps):
-                    for param in range(spec.n_params):
-                        for level in range(spec.n_levels):
-                            data = fdb.read(_field_key(member, step, param, level))
+                    if spec.io == "sync":
+                        for k in _step_keys(spec, member, step):
+                            data = handle.read(k)
                             assert data is not None and len(data) == spec.field_size
+                    elif spec.io == "batched":
+                        datas = handle.read_batch(_step_keys(spec, member, step))
+                        assert all(d is not None and len(d) == spec.field_size for d in datas)
+                    else:  # async: MARS-style request, parallel batched reads
+                        base = dict(_field_key(member, step, 0, 0, spec.n_datasets))
+                        base["param"] = [str(130 + p) for p in range(spec.n_params)]
+                        base["levelist"] = [str(lv) for lv in range(spec.n_levels)]
+                        datas = handle.read_many(base)
+                        assert len(datas) == spec.n_params * spec.n_levels
+                        assert all(d is not None and len(d) == spec.field_size for d in datas.values())
             elif mode == "list":
                 # post-processing pattern: list everything for one step
-                n = sum(1 for _ in fdb.list({"step": "0"}))
+                n = sum(1 for _ in handle.list({"step": "0"}))
                 assert n >= spec.n_params * spec.n_levels
             else:
                 raise ValueError(mode)
             starts[member], ends[member] = t0, time.perf_counter()
         except Exception as e:  # noqa: BLE001
             errors.append(e)
+        finally:
+            if handle is not fdb:
+                handle.close()  # stop the per-proc writer pool (fdb stays open)
 
     threads = [threading.Thread(target=proc, args=(m,)) for m in range(spec.n_procs)]
     wall0 = time.perf_counter()
@@ -102,9 +172,61 @@ def run_hammer(fdb: FDB, spec: HammerSpec, mode: str) -> dict:
     nbytes = spec.total_bytes if mode != "list" else 0
     return {
         "mode": mode,
+        "io": spec.io,
         "global_span_s": span,
         "wall_s": wall,
         "bandwidth_GiBps": (nbytes / span / GiB) if nbytes else 0.0,
         "fields": spec.fields_per_proc * spec.n_procs,
         "us_per_field": 1e6 * span / max(1, spec.fields_per_proc * spec.n_procs),
     }
+
+
+def sweep(spec: HammerSpec, backends=("daos", "posix"), lanes_sweep=(1, 2)) -> list[dict]:
+    """Run the same spec through every io mode and lane count on each
+    backend (fresh backend per cell), archive then retrieve."""
+    import tempfile
+
+    rows = []
+    for backend in backends:
+        for lanes in lanes_sweep:
+            for io in IO_MODES:
+                cell = replace(spec, io=io, n_datasets=max(spec.n_datasets, lanes))
+                with tempfile.TemporaryDirectory() as td:
+                    fdb = make_backend(backend, root=td, engine=None, lanes=lanes)
+                    try:
+                        w = run_hammer(fdb, cell, "archive")
+                        r = run_hammer(fdb, cell, "retrieve")
+                    finally:
+                        fdb.close()
+                rows.append({"backend": backend, "lanes": lanes, "io": io,
+                             "write_GiBps": w["bandwidth_GiBps"],
+                             "read_GiBps": r["bandwidth_GiBps"],
+                             "us_per_field_w": w["us_per_field"]})
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--procs", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--params", type=int, default=5)
+    ap.add_argument("--levels", type=int, default=4)
+    ap.add_argument("--field-size", type=int, default=1 << 16)
+    ap.add_argument("--backends", nargs="+", default=["daos", "posix"])
+    ap.add_argument("--lanes", nargs="+", type=int, default=[1, 2])
+    args = ap.parse_args()
+
+    spec = HammerSpec(n_procs=args.procs, n_steps=args.steps, n_params=args.params,
+                      n_levels=args.levels, field_size=args.field_size)
+    print(f"fdb-hammer: {spec.n_procs} procs x {spec.fields_per_proc} fields "
+          f"x {spec.field_size} B  ({spec.total_bytes / GiB:.3f} GiB)\n")
+    print(f"{'backend':8s} {'lanes':>5s} {'io':>8s} {'write GiB/s':>12s} {'read GiB/s':>11s} {'us/field(w)':>12s}")
+    for row in sweep(spec, backends=tuple(args.backends), lanes_sweep=tuple(args.lanes)):
+        print(f"{row['backend']:8s} {row['lanes']:5d} {row['io']:>8s} "
+              f"{row['write_GiBps']:12.3f} {row['read_GiBps']:11.3f} {row['us_per_field_w']:12.1f}")
+
+
+if __name__ == "__main__":
+    main()

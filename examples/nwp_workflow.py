@@ -5,9 +5,12 @@ the FDB while post-processing consumers read *transposed step slices* (all
 members/params for step n) as soon as step n is flushed — writers and
 readers run simultaneously: the contention pattern the paper targets.
 
-Runs the same workflow on BOTH backends and reports wall time + the
-backend op profile, then replays the op counts through the cluster cost
-model for the at-scale picture.
+Runs the same workflow on BOTH backends and in both I/O styles — ``sync``
+(one round-trip per field, the seed path) and ``async`` (each I/O server
+batch-archives a whole output step through an AsyncFDB writer pool; the
+post-processor pulls each step slice as one batched read) — and reports
+wall time + the backend op profile, then replays the op counts through the
+cluster cost model for the at-scale picture.
 
     PYTHONPATH=src python examples/nwp_workflow.py
 """
@@ -18,7 +21,7 @@ import time
 
 import numpy as np
 
-from repro.core import Key, NWP_SCHEMA_DAOS, NWP_SCHEMA_POSIX, make_fdb
+from repro.core import AsyncFDB, Key, NWP_SCHEMA_DAOS, NWP_SCHEMA_POSIX, make_fdb
 from repro.fields import synthetic_field
 from repro.core.daos import DaosEngine
 from repro.core.posix.stats import POSIX_STATS
@@ -38,8 +41,8 @@ def key(member: int, step: int, param: str) -> Key:
     )
 
 
-def run_workflow(make) -> dict:
-    """make: () -> FDB (fresh handle per process)."""
+def run_workflow(make, io: str = "sync") -> dict:
+    """make: () -> FDB (fresh handle per process).  io: 'sync' | 'async'."""
     payloads = {}
     for p in PARAMS:
         f = synthetic_field(p, nlat=FIELD_SHAPE[0], nlon=FIELD_SHAPE[1])
@@ -52,10 +55,16 @@ def run_workflow(make) -> dict:
 
     def io_server(member: int) -> None:
         fdb = make()
+        if io == "async":
+            # writer pool keeps the step's fields in flight concurrently
+            fdb = AsyncFDB(fdb, writers=2, batch_size=len(PARAMS), owns_fdb=True)
         try:
             for step in range(N_STEPS):
-                for p in PARAMS:
-                    fdb.archive(key(member, step, p), payloads[p])
+                if io == "async":
+                    fdb.archive_batch([(key(member, step, p), payloads[p]) for p in PARAMS])
+                else:
+                    for p in PARAMS:
+                        fdb.archive(key(member, step, p), payloads[p])
                 fdb.flush()  # publish this member's step (the workflow
                 # controller learns availability exactly here — paper §1.2)
                 with lock:
@@ -64,6 +73,9 @@ def run_workflow(make) -> dict:
                         step_done[step].set()
         except Exception as e:  # noqa: BLE001
             errors.append(e)
+        finally:
+            if io == "async":
+                fdb.close()
 
     def post_processor() -> None:
         """Consumes step n as soon as every member flushed it (the
@@ -72,13 +84,14 @@ def run_workflow(make) -> dict:
         try:
             for step in range(N_STEPS):
                 step_done[step].wait(timeout=60)
-                n = 0
-                for member in range(N_MEMBERS):
-                    for p in PARAMS:
-                        data = fdb.read(key(member, step, p))
-                        assert data is not None, f"missing m{member} s{step} {p}"
-                        n += 1
-                assert n == N_MEMBERS * len(PARAMS)
+                step_keys = [key(m, step, p) for m in range(N_MEMBERS) for p in PARAMS]
+                if io == "async":
+                    # the whole transposed slice as one batched read
+                    datas = fdb.read_batch(step_keys)
+                    assert all(d is not None for d in datas), f"missing field in step {step}"
+                else:
+                    for k in step_keys:
+                        assert fdb.read(k) is not None, f"missing {dict(k)}"
         except Exception as e:  # noqa: BLE001
             errors.append(e)
 
@@ -99,18 +112,20 @@ def main() -> None:
     print(f"ensemble: {N_MEMBERS} members x {N_STEPS} steps x {len(PARAMS)} params, "
           f"readers consume each step while the next is written\n")
 
-    engine = DaosEngine()
-    r = run_workflow(lambda: make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=engine))
-    snap = engine.stats.snapshot()
-    print(f"DAOS : {r['wall_s']*1e3:7.1f} ms  ops={sum(snap['ops'].values())} "
-          f"(kv_put={snap['ops'].get('daos_kv_put',0)}, array_write={snap['ops'].get('daos_array_write',0)})")
+    for io in ("sync", "async"):
+        engine = DaosEngine()
+        r = run_workflow(lambda: make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=engine), io=io)
+        snap = engine.stats.snapshot()
+        print(f"DAOS  ({io:5s}): {r['wall_s']*1e3:7.1f} ms  ops={sum(snap['ops'].values())} "
+              f"(kv_put={snap['ops'].get('daos_kv_put',0)}, array_write={snap['ops'].get('daos_array_write',0)}, "
+              f"eq_poll={snap['ops'].get('daos_eq_poll',0)})")
 
-    with tempfile.TemporaryDirectory() as td:
-        POSIX_STATS.reset()
-        r = run_workflow(lambda: make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=td))
-        snap = POSIX_STATS.snapshot()
-        print(f"POSIX: {r['wall_s']*1e3:7.1f} ms  lock-acquisitions={snap['lock_acquisitions']} "
-              f"mds-ops={snap['mds_ops']}")
+        with tempfile.TemporaryDirectory() as td:
+            POSIX_STATS.reset()
+            r = run_workflow(lambda: make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=td), io=io)
+            snap = POSIX_STATS.snapshot()
+            print(f"POSIX ({io:5s}): {r['wall_s']*1e3:7.1f} ms  lock-acquisitions={snap['lock_acquisitions']} "
+                  f"mds-ops={snap['mds_ops']}")
 
     # at-scale projection through the calibrated cost model
     from repro.simulation import Workload, simulate

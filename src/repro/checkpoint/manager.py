@@ -19,6 +19,11 @@ Guarantees inherited from FDB semantics (§1.3):
 
 Async mode: ``save()`` snapshots to host memory and hands off to a writer
 thread (the step loop never blocks on storage — straggler isolation).
+
+Shard I/O runs through :class:`~repro.core.async_fdb.AsyncFDB`: the shards
+of a step are archived as parallel batches by a bounded writer pool, a
+``drain()`` barrier guarantees every shard is in the backend before the
+MANIFEST commit sentinel is archived, and ``flush()`` publishes the step.
 """
 
 from __future__ import annotations
@@ -31,19 +36,35 @@ from typing import Any
 import jax
 import numpy as np
 
-from repro.core import FDB, Key
+from repro.core import AsyncFDB, FDB, Key
 from .serialization import decode_array, encode_array, flatten_tree, unflatten_tree
 
 __all__ = ["CheckpointManager"]
 
 
 class CheckpointManager:
-    def __init__(self, fdb: FDB, run: str, *, writer: str = "w0", async_mode: bool = True, keep: int | None = None):
+    def __init__(
+        self,
+        fdb: FDB,
+        run: str,
+        *,
+        writer: str = "w0",
+        async_mode: bool = True,
+        keep: int | None = None,
+        io_writers: int = 2,
+    ):
         self.fdb = fdb
         self.run = run
         self.writer = writer
         self.async_mode = async_mode
         self.keep = keep
+        # shard lane: batched background archives over the caller's FDB —
+        # created lazily at first write so restore-only / sync-only managers
+        # never spawn writer threads
+        self._io_writers = io_writers
+        self._owns_afdb = False
+        self._afdb: AsyncFDB | None = fdb if isinstance(fdb, AsyncFDB) else None
+        self._afdb_mu = threading.Lock()
         self._q: queue.Queue = queue.Queue(maxsize=2)
         self._errors: list[Exception] = []
         self._thread: threading.Thread | None = None
@@ -66,6 +87,9 @@ class CheckpointManager:
         leaves, manifest = flatten_tree(state)
         host = {name: np.asarray(leaf) for name, leaf in leaves.items()}
         if self.async_mode and not blocking:
+            if self._thread is None:  # restart after close(): manager is reusable
+                self._thread = threading.Thread(target=self._writer_loop, name="ckpt-writer", daemon=True)
+                self._thread.start()
             self._q.put((step, host, manifest))
         else:
             self._write(step, host, manifest)
@@ -79,7 +103,11 @@ class CheckpointManager:
 
     def _writer_loop(self) -> None:
         while True:
-            step, host, manifest = self._q.get()
+            item = self._q.get()
+            if item is None:  # close() sentinel
+                self._q.task_done()
+                return
+            step, host, manifest = item
             try:
                 self._write(step, host, manifest)
             except Exception as e:  # noqa: BLE001 — surfaced on next save()/wait()
@@ -87,15 +115,37 @@ class CheckpointManager:
             finally:
                 self._q.task_done()
 
+    def _shard_lane(self) -> AsyncFDB:
+        with self._afdb_mu:
+            if self._afdb is None:
+                self._afdb = AsyncFDB(self.fdb, writers=self._io_writers, batch_size=16)
+                self._owns_afdb = True
+            return self._afdb
+
     def _write(self, step: int, host: dict[str, np.ndarray], manifest: dict) -> None:
-        for name, arr in host.items():
-            self.fdb.archive(self._key(step, name), encode_array(arr))
-        self.fdb.archive(
+        shards = [(self._key(step, name), encode_array(arr)) for name, arr in host.items()]
+        sentinel = (
             self._key(step, "MANIFEST"),
             json.dumps({**manifest, "step": step, "leaves": sorted(host)}).encode(),
         )
-        # ACID publish: everything above becomes visible atomically here
-        self.fdb.flush()
+        if self.async_mode or self._afdb is not None:
+            # shards go through the async lane as batched background archives
+            afdb = self._shard_lane()
+            afdb.archive_batch(shards)
+            # barrier: every shard must be in the backend before the commit
+            # sentinel, so a MANIFEST can never be visible ahead of its
+            # shards on an immediate-visibility backend (DAOS)
+            afdb.drain()
+            afdb.archive(*sentinel)
+            # ACID publish: everything above becomes visible atomically here
+            afdb.flush()
+        else:
+            # sync manager: batched but threadless — archive_batch returns
+            # only once every shard is in the backend, so the sentinel still
+            # commits last
+            self.fdb.archive_batch(shards)
+            self.fdb.archive(*sentinel)
+            self.fdb.flush()
         if self.keep:
             self._retain(step)
 
@@ -140,3 +190,37 @@ class CheckpointManager:
 
     def wipe_run(self) -> None:
         self.fdb.wipe(Key(run=self.run, kind="ckpt"))
+
+    # ------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Drain queued checkpoints and stop the background writer machinery
+        (the snapshot thread and, if this manager created it, the AsyncFDB
+        writer pool).  The caller's FDB stays open.  Threads are stopped
+        even when a queued write failed; the error re-raises afterwards."""
+        wait_err: Exception | None = None
+        try:
+            self.wait()
+        except Exception as e:  # noqa: BLE001
+            wait_err = e
+        if self._thread is not None:
+            self._q.put(None)
+            self._thread.join(timeout=30)
+            self._thread = None
+        if self._owns_afdb and self._afdb is not None:
+            try:
+                self._afdb.close()
+            except Exception as e:  # noqa: BLE001
+                wait_err = wait_err or e
+            # reset so a later save() respawns the lane (reusable manager)
+            self._afdb = None
+            self._owns_afdb = False
+        if wait_err is not None:
+            raise wait_err
+        if self._errors:
+            raise self._errors.pop(0)
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

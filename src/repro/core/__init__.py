@@ -4,15 +4,19 @@ Public surface:
 
 - :class:`Key`, :class:`Schema` — metadata identifiers and the 3-level split
 - :class:`FDB`, :func:`make_fdb` — the facade with the paper's semantics
+- :class:`AsyncFDB` — background writer pool + parallel batched reads
+- :class:`FDBRouter`, :func:`make_router` — multi-lane dataset sharding
 - :mod:`repro.core.daos` — the emulated DAOS (MVCC KV/Array object store)
 - :mod:`repro.core.posix` / :mod:`repro.core.daos_backend` — the backends
 - :mod:`repro.core.costmodel` — Lustre-vs-DAOS per-op cost model at scale
 """
 
+from .async_fdb import AsyncFDB
 from .catalogue import Catalogue, ListEntry
 from .datahandle import DataHandle, MemoryDataHandle
 from .fdb import FDB, make_fdb
 from .keys import Key, key_union
+from .router import FDBRouter, make_router
 from .schema import (
     CHECKPOINT_SCHEMA,
     DATASET_SCHEMA,
@@ -30,6 +34,9 @@ __all__ = [
     "SplitKey",
     "FDB",
     "make_fdb",
+    "AsyncFDB",
+    "FDBRouter",
+    "make_router",
     "Catalogue",
     "ListEntry",
     "Store",

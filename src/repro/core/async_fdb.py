@@ -1,0 +1,245 @@
+"""AsyncFDB — the concurrency facade over any FDB-like object.
+
+The paper attributes most of DAOS's win under contention to keeping many
+small I/Os in flight while POSIX round-trips one lock at a time; the
+synchronous :class:`~repro.core.fdb.FDB` cannot express that from a single
+client.  AsyncFDB adds it without changing the semantics:
+
+- ``archive()`` enqueues and returns immediately; a bounded pool of
+  background writer threads drains the queue in batches through
+  ``FDB.archive_batch`` (so the backends' amortised paths are exercised);
+- ``flush()`` is a barrier: it blocks until every field archived by this
+  process has been handed to the backend, THEN flushes the underlying FDB —
+  store before catalogue, so the ordering invariant of §1.3 is preserved
+  end-to-end and an index entry can never point at unpersisted bytes;
+- ``drain()`` is the write barrier alone (all queued archives landed in the
+  backend, nothing published yet on deferred-visibility backends) — the
+  checkpoint manager uses it to order its commit sentinel;
+- ``retrieve_many()`` expands a MARS-style multi-valued request and fans the
+  reads out over a thread pool in batches (parallel batched reads).
+
+Writer errors are captured and re-raised on the next ``archive()``/
+``flush()``/``close()`` — an async archive is not allowed to fail silently.
+
+Each writer thread owns a hash-partitioned queue: every identifier always
+lands on the same writer, so re-archives of one key stay FIFO and the
+facade keeps FDB's transactional last-write-wins replacement semantics.
+(Cross-key ordering is not promised — FDB never promised it either.)
+
+Composes with :class:`~repro.core.router.FDBRouter` in either order: an
+AsyncFDB over a router gives one queue feeding N lanes; a router over
+AsyncFDB lanes gives a queue per lane.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Iterable, Iterator, Mapping, Sequence
+
+from .catalogue import ListEntry
+from .datahandle import DataHandle
+from .keys import Key
+from .schema import Schema
+
+__all__ = ["AsyncFDB"]
+
+_STOP = object()
+
+
+class AsyncFDB:
+    def __init__(
+        self,
+        fdb,
+        *,
+        writers: int = 4,
+        batch_size: int = 32,
+        queue_depth: int = 1024,
+        readers: int = 8,
+        read_batch_size: int = 32,
+        owns_fdb: bool = False,
+    ):
+        if writers < 1:
+            raise ValueError("need at least one writer thread")
+        self.fdb = fdb
+        self.schema: Schema = fdb.schema
+        self._batch_size = max(1, batch_size)
+        self._read_batch_size = max(1, read_batch_size)
+        self._readers = max(1, readers)
+        self._owns_fdb = owns_fdb
+        # one queue per writer, identifiers hash-partitioned across them:
+        # a key's archives are FIFO through its single writer (last-write-
+        # wins survives), while distinct keys still fill every lane
+        self._qs: list[queue.Queue] = [queue.Queue(maxsize=queue_depth) for _ in range(writers)]
+        self._errors: list[Exception] = []
+        self._err_mu = threading.Lock()
+        self._closed = False
+        self._pool: ThreadPoolExecutor | None = None
+        self._pool_mu = threading.Lock()
+        self._threads = [
+            threading.Thread(target=self._writer_loop, args=(q,), name=f"fdb-writer-{i}", daemon=True)
+            for i, q in enumerate(self._qs)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------ writer pool
+    def _writer_loop(self, q: queue.Queue) -> None:
+        while True:
+            item = q.get()
+            if item is _STOP:
+                q.task_done()
+                return
+            batch = [item]
+            # greedy drain: coalesce whatever is already queued into one
+            # backend round, up to the batch size
+            while len(batch) < self._batch_size:
+                try:
+                    nxt = q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is _STOP:
+                    # keep the sentinel last: finish this batch, then exit
+                    try:
+                        self.fdb.archive_batch(batch)
+                    except Exception as e:  # noqa: BLE001
+                        with self._err_mu:
+                            self._errors.append(e)
+                    finally:
+                        for _ in batch:
+                            q.task_done()
+                        q.task_done()  # the sentinel itself
+                    return
+                batch.append(nxt)
+            try:
+                self.fdb.archive_batch(batch)
+            except Exception as e:  # noqa: BLE001 — surfaced on archive/flush
+                with self._err_mu:
+                    self._errors.append(e)
+            finally:
+                for _ in batch:
+                    q.task_done()
+
+    def _raise_pending(self) -> None:
+        with self._err_mu:
+            if self._errors:
+                raise self._errors.pop(0)
+
+    # ------------------------------------------------------------------ write
+    def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
+        """Hand the field to the background pool (blocks only when the
+        bounded queue is full — backpressure, not unbounded memory)."""
+        if self._closed:
+            raise RuntimeError("archive() on a closed AsyncFDB")
+        self._raise_pending()
+        key = key if isinstance(key, Key) else Key(key)
+        self.schema.validate(key)  # fail fast, in the caller, not the pool
+        self._qs[hash(key) % len(self._qs)].put((key, bytes(data)))
+
+    def archive_batch(self, items: Sequence[tuple[Key | Mapping[str, str], bytes]]) -> None:
+        for key, data in items:
+            self.archive(key, data)
+
+    def drain(self) -> None:
+        """Write barrier: block until every queued field has been archived
+        into the backend (visible on immediate-visibility backends, pending
+        publish on deferred ones).  Does NOT flush the underlying FDB."""
+        for q in self._qs:
+            q.join()
+        self._raise_pending()
+
+    def flush(self) -> None:
+        """Full barrier + publish: all queued archives land in the Store and
+        Catalogue first, then the underlying flush runs store-before-
+        catalogue — the §1.3 invariant, preserved under async writes."""
+        self.drain()
+        self.fdb.flush()
+
+    # ------------------------------------------------------------------- read
+    def _read_pool(self) -> ThreadPoolExecutor:
+        with self._pool_mu:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self._readers, thread_name_prefix="fdb-reader"
+                )
+            return self._pool
+
+    def retrieve(self, key: Key | Mapping[str, str]) -> DataHandle | None:
+        return self.fdb.retrieve(key)
+
+    def read(self, key: Key | Mapping[str, str]) -> bytes | None:
+        return self.fdb.read(key)
+
+    def retrieve_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[DataHandle | None]:
+        return self.fdb.retrieve_batch(keys)
+
+    def read_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[bytes | None]:
+        return self.fdb.read_batch(keys)
+
+    def _fan_out(self, keys: list[Key], method) -> list:
+        chunks = [keys[i : i + self._read_batch_size] for i in range(0, len(keys), self._read_batch_size)]
+        if len(chunks) <= 1:
+            return method(keys)
+        pool = self._read_pool()
+        futures = [pool.submit(method, c) for c in chunks]
+        out: list = []
+        for f in futures:
+            out.extend(f.result())
+        return out
+
+    def retrieve_many(self, request: Mapping[str, Iterable[str] | str]) -> dict[Key, DataHandle | None]:
+        """MARS-style expansion + parallel batched reads: the request's
+        cartesian product is chunked and each chunk retrieved concurrently
+        through the backend's batched path."""
+        keys = self.schema.expand(request)
+        return dict(zip(keys, self._fan_out(keys, self.fdb.retrieve_batch)))
+
+    def read_many(self, request: Mapping[str, Iterable[str] | str]) -> dict[Key, bytes | None]:
+        keys = self.schema.expand(request)
+        return dict(zip(keys, self._fan_out(keys, self.fdb.read_batch)))
+
+    # ------------------------------------------------------------- pass-through
+    @property
+    def store(self):
+        return self.fdb.store
+
+    @property
+    def catalogue(self):
+        return self.fdb.catalogue
+
+    def list(self, request: Mapping[str, Iterable[str] | str] | None = None) -> Iterator[ListEntry]:
+        return self.fdb.list(request)
+
+    def wipe(self, dataset_key: Key | Mapping[str, str]) -> None:
+        self.fdb.wipe(dataset_key)
+
+    # ---------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        # a failed flush must NOT leave the pool half-open: stop the writer
+        # threads and reader pool unconditionally, re-raise at the end
+        flush_err: Exception | None = None
+        try:
+            self.flush()
+        except Exception as e:  # noqa: BLE001
+            flush_err = e
+        for q in self._qs:
+            q.put(_STOP)
+        for t in self._threads:
+            t.join(timeout=30)
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+        if self._owns_fdb:
+            self.fdb.close()
+        if flush_err is not None:
+            raise flush_err
+        self._raise_pending()
+
+    def __enter__(self) -> "AsyncFDB":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

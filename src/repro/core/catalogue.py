@@ -11,13 +11,18 @@ be used as a cache) — it returns None.
 from __future__ import annotations
 
 import abc
-from typing import Iterable, Iterator, Mapping
+from typing import Iterable, Iterator, Mapping, Sequence, Tuple
 
 from .keys import Key
 from .schema import Schema
 from .store import FieldLocation
 
-__all__ = ["Catalogue", "ListEntry"]
+__all__ = ["Catalogue", "ListEntry", "IndexEntry", "IndexTriple"]
+
+#: one element of a Catalogue archive batch
+IndexEntry = Tuple[Key, Key, Key, FieldLocation]  # (dataset, collocation, element, location)
+#: one element of a Catalogue retrieve batch
+IndexTriple = Tuple[Key, Key, Key]  # (dataset, collocation, element)
 
 
 class ListEntry:
@@ -39,6 +44,13 @@ class Catalogue(abc.ABC):
     def archive(self, dataset_key: Key, collocation_key: Key, element_key: Key, location: FieldLocation) -> None:
         """Insert element->location into the index (maybe only in memory)."""
 
+    def archive_batch(self, entries: Sequence[IndexEntry]) -> None:
+        """Insert many element->location mappings in one round.  Sequential
+        default; backends override to amortise index-object resolution and
+        lock/round-trip costs across the batch."""
+        for ds, co, el, loc in entries:
+            self.archive(ds, co, el, loc)
+
     @abc.abstractmethod
     def flush(self) -> None:
         """Persist + publish all indexed info to external readers/listers."""
@@ -46,6 +58,10 @@ class Catalogue(abc.ABC):
     @abc.abstractmethod
     def retrieve(self, dataset_key: Key, collocation_key: Key, element_key: Key) -> FieldLocation | None:
         ...
+
+    def retrieve_batch(self, triples: Sequence[IndexTriple]) -> list[FieldLocation | None]:
+        """Vectored ``retrieve``; absent fields come back as None."""
+        return [self.retrieve(ds, co, el) for ds, co, el in triples]
 
     @abc.abstractmethod
     def list(self, request: Mapping[str, Iterable[str] | str]) -> Iterator[ListEntry]:

@@ -55,47 +55,72 @@ class DaosCatalogue(Catalogue):
         self._axis_cache: dict[tuple[str, str, str], set[str]] = {}  # (cont, index, kw) -> values
 
     # ------------------------------------------------------------------ util
+    # _mu serialises resolution + cache fill across THIS process's threads
+    # (the AsyncFDB writer pool drives archive_batch concurrently); racing
+    # writers in OTHER processes are converged by the publish-then-re-read
+    # dance below, resolved server-side by the engine's MVCC.
+
     def _dataset_container(self, dataset_s: str, *, create: bool) -> str | None:
-        cont = self._dataset_cache.get(dataset_s)
-        if cont is not None:
+        with self._mu:
+            cont = self._dataset_cache.get(dataset_s)
+            if cont is not None:
+                return cont
+            raw = self._engine.kv_get(self._pool, self._root, ROOT_OID, dataset_s)
+            if raw is not None:
+                cont = raw.decode()
+            elif create:
+                cont = dataset_s  # same name as used by the Store backend
+                self._engine.cont_create(self._pool, cont, exist_ok=True)
+                # ensure the dataset KV exists (OID 0.0) then publish in root KV
+                self._engine.kv_put(self._pool, cont, ROOT_OID, "__dataset__", dataset_s.encode())
+                self._engine.kv_put(self._pool, self._root, ROOT_OID, dataset_s, cont.encode())
+            else:
+                return None
+            self._dataset_cache[dataset_s] = cont
             return cont
-        raw = self._engine.kv_get(self._pool, self._root, ROOT_OID, dataset_s)
-        if raw is not None:
-            cont = raw.decode()
-        elif create:
-            cont = dataset_s  # same name as used by the Store backend
-            self._engine.cont_create(self._pool, cont, exist_ok=True)
-            # ensure the dataset KV exists (OID 0.0) then publish in root KV
-            self._engine.kv_put(self._pool, cont, ROOT_OID, "__dataset__", dataset_s.encode())
-            self._engine.kv_put(self._pool, self._root, ROOT_OID, dataset_s, cont.encode())
-        else:
-            return None
-        self._dataset_cache[dataset_s] = cont
-        return cont
 
     def _index_kv(self, cont: str, colloc_s: str, *, create: bool) -> ObjectId | None:
-        ck = (cont, colloc_s)
-        oid = self._index_cache.get(ck)
-        if oid is not None:
+        with self._mu:
+            ck = (cont, colloc_s)
+            oid = self._index_cache.get(ck)
+            if oid is not None:
+                return oid
+            raw = self._engine.kv_get(self._pool, cont, ROOT_OID, f"idx:{colloc_s}")
+            if raw is not None:
+                oid = ObjectId.parse(raw.decode())
+            elif create:
+                base = self._engine.cont_alloc_oids(self._pool, cont, 64)
+                oid = ObjectId(0, base)
+                # transactional publish: last writer wins; both writers' OIDs map
+                # the same collocation key, so re-read after publish to converge
+                self._engine.kv_put(self._pool, cont, ROOT_OID, f"idx:{colloc_s}", str(oid).encode())
+                raw2 = self._engine.kv_get(self._pool, cont, ROOT_OID, f"idx:{colloc_s}")
+                oid = ObjectId.parse(raw2.decode())
+            else:
+                return None
+            self._index_cache[ck] = oid
             return oid
-        raw = self._engine.kv_get(self._pool, cont, ROOT_OID, f"idx:{colloc_s}")
-        if raw is not None:
-            oid = ObjectId.parse(raw.decode())
-        elif create:
-            base = self._engine.cont_alloc_oids(self._pool, cont, 64)
-            oid = ObjectId(0, base)
-            # transactional publish: last writer wins; both writers' OIDs map
-            # the same collocation key, so re-read after publish to converge
-            self._engine.kv_put(self._pool, cont, ROOT_OID, f"idx:{colloc_s}", str(oid).encode())
-            raw2 = self._engine.kv_get(self._pool, cont, ROOT_OID, f"idx:{colloc_s}")
-            oid = ObjectId.parse(raw2.decode())
-        else:
-            return None
-        self._index_cache[ck] = oid
-        return oid
 
     def _axis_oid(self, index_oid: ObjectId, axis_pos: int) -> ObjectId:
         return ObjectId(0, _AXIS_OID_BASE + index_oid.lo * 64 + axis_pos + 1)
+
+    def _axis_pending(self, cont: str, index_oid: ObjectId, element_keys) -> list[tuple[int, str, str]]:
+        """Axis values of *element_keys* not yet known to be stored, as
+        ``(axis_pos, keyword, value)``.  The cache is only READ here; call
+        :meth:`_axis_commit` once the puts succeed — a failed batch must not
+        leave values cached-but-never-stored (list() would silently prune)."""
+        pending: list[tuple[int, str, str]] = []
+        with self._mu:
+            for pos, kw in enumerate(self.schema.element_keys):
+                cached = self._axis_cache.setdefault((cont, str(index_oid), kw), set())
+                for val in sorted({ek[kw] for ek in element_keys} - cached):
+                    pending.append((pos, kw, val))
+        return pending
+
+    def _axis_commit(self, cont: str, index_oid: ObjectId, pending) -> None:
+        with self._mu:
+            for _, kw, val in pending:
+                self._axis_cache.setdefault((cont, str(index_oid), kw), set()).add(val)
 
     # ------------------------------------------------------------- Catalogue
     def archive(self, dataset_key: Key, collocation_key: Key, element_key: Key, location: FieldLocation) -> None:
@@ -105,15 +130,40 @@ class DaosCatalogue(Catalogue):
         cont = self._dataset_container(ds, create=True)
         index_oid = self._index_kv(cont, co, create=True)
         # axis KVs: record each element-keyword value for list() pruning
-        for pos, kw in enumerate(self.schema.element_keys):
-            axis_key = (cont, str(index_oid), kw)
-            cached = self._axis_cache.setdefault(axis_key, set())
-            val = element_key[kw]
-            if val not in cached:
-                self._engine.kv_put(self._pool, cont, self._axis_oid(index_oid, pos), val, b"")
-                cached.add(val)
+        pending = self._axis_pending(cont, index_oid, [element_key])
+        for pos, _, val in pending:
+            self._engine.kv_put(self._pool, cont, self._axis_oid(index_oid, pos), val, b"")
         # the transactional insert that publishes the field
         self._engine.kv_put(self._pool, cont, index_oid, el, location.encode())
+        self._axis_commit(cont, index_oid, pending)
+
+    def archive_batch(self, entries) -> None:
+        """Batched index insert: container + index-KV resolution happens once
+        per (dataset, collocation) group, axis updates are deduplicated
+        across the whole batch, and every insert for a container goes out as
+        ONE burst of transactional puts with a single event-queue drain."""
+        groups: dict[tuple[str, str], list[tuple[Key, FieldLocation]]] = {}
+        for dataset_key, collocation_key, element_key, location in entries:
+            k = (dataset_key.stringify(), collocation_key.stringify())
+            groups.setdefault(k, []).append((element_key, location))
+        by_cont: dict[str, list[tuple[ObjectId, str, bytes]]] = {}
+        commits: dict[str, list[tuple[ObjectId, list]]] = {}
+        for (ds, co), group in groups.items():
+            cont = self._dataset_container(ds, create=True)
+            index_oid = self._index_kv(cont, co, create=True)
+            puts = by_cont.setdefault(cont, [])
+            # axis updates: one pass over the distinct values of the batch
+            pending = self._axis_pending(cont, index_oid, [ek for ek, _ in group])
+            puts.extend((self._axis_oid(index_oid, pos), val, b"") for pos, _, val in pending)
+            puts.extend(
+                (index_oid, element_key.stringify(), location.encode())
+                for element_key, location in group
+            )
+            commits.setdefault(cont, []).append((index_oid, pending))
+        for cont, puts in by_cont.items():
+            self._engine.kv_put_multi(self._pool, cont, puts)
+            for index_oid, pending in commits[cont]:
+                self._axis_commit(cont, index_oid, pending)
 
     def flush(self) -> None:
         # archive() already persisted and published every entry (MVCC).
@@ -130,6 +180,33 @@ class DaosCatalogue(Catalogue):
         if raw is None:
             return None  # absence is not an error (FDB-as-cache)
         return FieldLocation.decode(raw)
+
+    def retrieve_batch(self, triples) -> list[FieldLocation | None]:
+        """Batched lookup: container and index-KV resolution is shared per
+        (dataset, collocation) group; each container's burst of ``kv_get``s
+        costs one event-queue drain."""
+        out: list[FieldLocation | None] = [None] * len(triples)
+        groups: dict[tuple[str, str], list[tuple[int, Key]]] = {}
+        for i, (dataset_key, collocation_key, element_key) in enumerate(triples):
+            k = (dataset_key.stringify(), collocation_key.stringify())
+            groups.setdefault(k, []).append((i, element_key))
+        by_cont: dict[str, list[tuple[int, ObjectId, str]]] = {}
+        for (ds, co), group in groups.items():
+            cont = self._dataset_container(ds, create=False)
+            if cont is None:
+                continue
+            index_oid = self._index_kv(cont, co, create=False)
+            if index_oid is None:
+                continue
+            by_cont.setdefault(cont, []).extend(
+                (i, index_oid, element_key.stringify()) for i, element_key in group
+            )
+        for cont, gets in by_cont.items():
+            raws = self._engine.kv_get_multi(self._pool, cont, [(oid, el) for _, oid, el in gets])
+            for (i, _, _), raw in zip(gets, raws):
+                if raw is not None:
+                    out[i] = FieldLocation.decode(raw)
+        return out
 
     def list(self, request: Mapping[str, Iterable[str] | str]) -> Iterator[ListEntry]:
         ds_req, co_req, el_req = self.schema.request_levels(request)
@@ -181,8 +258,9 @@ class DaosCatalogue(Catalogue):
         # container (paper §3.2.2, rolling archive)
         self._engine.cont_destroy(self._pool, ds)
         self._engine.kv_remove(self._pool, self._root, ROOT_OID, ds)
-        self._dataset_cache.pop(ds, None)
-        for k in [k for k in self._index_cache if k[0] == ds]:
-            del self._index_cache[k]
-        for k in [k for k in self._axis_cache if k[0] == ds]:
-            del self._axis_cache[k]
+        with self._mu:
+            self._dataset_cache.pop(ds, None)
+            for k in [k for k in self._index_cache if k[0] == ds]:
+                del self._index_cache[k]
+            for k in [k for k in self._axis_cache if k[0] == ds]:
+                del self._axis_cache[k]

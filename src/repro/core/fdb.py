@@ -19,12 +19,12 @@ point at unpersisted bytes, on either backend.
 
 from __future__ import annotations
 
-from typing import Iterable, Iterator, Mapping
+from typing import Iterable, Iterator, Mapping, Sequence
 
 from .catalogue import Catalogue, ListEntry
 from .datahandle import DataHandle
 from .keys import Key
-from .schema import Schema
+from .schema import Schema, SplitKey
 from .store import Store
 
 __all__ = ["FDB", "make_fdb"]
@@ -45,6 +45,24 @@ class FDB:
         location = self.store.archive(bytes(data), split.dataset, split.collocation)
         self.catalogue.archive(split.dataset, split.collocation, split.element, location)
 
+    def archive_batch(self, items: Sequence[tuple[Key | Mapping[str, str], bytes]]) -> None:
+        """Archive many (key, data) pairs in one backend round.
+
+        Equivalent to sequential ``archive`` calls but the per-call costs
+        (locks, OID allocation, completion waits) are amortised across the
+        batch.  The ordering invariant holds batch-wide: the Store archives
+        the WHOLE batch before the Catalogue indexes any of it."""
+        splits = [self._split(key) for key, _ in items]
+        locations = self.store.archive_batch(
+            [(bytes(data), s.dataset, s.collocation) for (_, data), s in zip(items, splits)]
+        )
+        self.catalogue.archive_batch(
+            [(s.dataset, s.collocation, s.element, loc) for s, loc in zip(splits, locations)]
+        )
+
+    def _split(self, key: Key | Mapping[str, str]) -> SplitKey:
+        return self.schema.split(key if isinstance(key, Key) else Key(key))
+
     def flush(self) -> None:
         self.store.flush()       # data durable first …
         self.catalogue.flush()   # … then the index publishes it
@@ -57,6 +75,23 @@ class FDB:
             return None  # not an error: FDB may be a cache in a larger system
         return self.store.retrieve(location)
 
+    def retrieve_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[DataHandle | None]:
+        """Vectored ``retrieve``: one Catalogue batch lookup, one Store batch
+        open.  Absent fields come back as None."""
+        splits = [self._split(k) for k in keys]
+        locations = self.catalogue.retrieve_batch(
+            [(s.dataset, s.collocation, s.element) for s in splits]
+        )
+        return self.store.retrieve_batch(locations)
+
+    def retrieve_many(self, request: Mapping[str, Iterable[str] | str]) -> dict[Key, DataHandle | None]:
+        """MARS-style retrieval: expand a (possibly multi-valued) request
+        into the cartesian product of full identifiers and retrieve them all
+        in one batch.  Sequential single-lane default; :class:`AsyncFDB`
+        overrides this with parallel batched reads."""
+        keys = self.schema.expand(request)
+        return dict(zip(keys, self.retrieve_batch(keys)))
+
     def read(self, key: Key | Mapping[str, str]) -> bytes | None:
         h = self.retrieve(key)
         if h is None:
@@ -65,6 +100,18 @@ class FDB:
             return h.read()
         finally:
             h.close()
+
+    def read_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[bytes | None]:
+        out: list[bytes | None] = []
+        for h in self.retrieve_batch(keys):
+            if h is None:
+                out.append(None)
+            else:
+                try:
+                    out.append(h.read())
+                finally:
+                    h.close()
+        return out
 
     def list(self, request: Mapping[str, Iterable[str] | str] | None = None) -> Iterator[ListEntry]:
         return self.catalogue.list(request or {})

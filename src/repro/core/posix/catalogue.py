@@ -61,14 +61,26 @@ class PosixCatalogue(Catalogue):
         with self._mu:
             self._pending.setdefault(k, {})[element_key.stringify()] = location
 
+    def archive_batch(self, entries) -> None:
+        # one mutex acquisition covers the whole batch of pending inserts
+        with self._mu:
+            for dataset_key, collocation_key, element_key, location in entries:
+                k = (dataset_key.stringify(), collocation_key.stringify())
+                self._pending.setdefault(k, {})[element_key.stringify()] = location
+
     def flush(self) -> None:
         with self._mu:
             pending, self._pending = self._pending, {}
         for (ds_s, co_s), entries in pending.items():
             ddir = os.path.join(self._root, ds_s)
             os.makedirs(ddir, exist_ok=True)
-            self._seq += 1
-            segname = f"{co_s}.{self._uid}.{self._seq}.index"
+            with self._mu:
+                # concurrent flushers (AsyncFDB, shared handles) must never
+                # compute the same segment name — open('wb') would truncate
+                # the other flusher's already-published segment
+                self._seq += 1
+                seq = self._seq
+            segname = f"{co_s}.{self._uid}.{seq}.index"
             segpath = os.path.join(ddir, segname)
             with open(segpath, "wb") as f:
                 POSIX_STATS.account("create_index_segment", mds=2)
@@ -91,43 +103,50 @@ class PosixCatalogue(Catalogue):
             POSIX_STATS.account("toc_append", nbytes_w=len(record), locks=1, mds=1)
 
     # --------------------------------------------------------------- reading
+    # reader caches are shared across this process's threads (AsyncFDB fans
+    # retrieve_batch out concurrently), so tail/load hold the mutex: a
+    # racing pair of tails must not double-append records or regress the
+    # cached offset
+
     def _tail_toc(self, ds_s: str) -> list[tuple[str, str]]:
         """Incrementally read new TOC records (cached offset per dataset)."""
         tocpath = os.path.join(self._root, ds_s, _TOC)
-        records = self._toc_records.setdefault(ds_s, [])
-        try:
-            size = os.path.getsize(tocpath)
-        except FileNotFoundError:
+        with self._mu:
+            records = self._toc_records.setdefault(ds_s, [])
+            try:
+                size = os.path.getsize(tocpath)
+            except FileNotFoundError:
+                return records
+            off = self._toc_offset.get(ds_s, 0)
+            if size > off:
+                with open(tocpath, "rb") as f:
+                    f.seek(off)
+                    data = f.read(size - off)
+                # only complete records (writer appends are record-atomic)
+                consumed = data.rfind(b"\n") + 1
+                for line in data[:consumed].splitlines():
+                    parts = line.decode().split(" ", 2)
+                    if len(parts) == 3 and parts[0] == "idx":
+                        records.append((parts[1], parts[2]))
+                self._toc_offset[ds_s] = off + consumed
+                # tailing a TOC being appended: conflicting read lock + stat
+                POSIX_STATS.account("toc_read", nbytes_r=consumed, locks=1, mds=1)
             return records
-        off = self._toc_offset.get(ds_s, 0)
-        if size > off:
-            with open(tocpath, "rb") as f:
-                f.seek(off)
-                data = f.read(size - off)
-            # only complete records (writer appends are record-atomic)
-            consumed = data.rfind(b"\n") + 1
-            for line in data[:consumed].splitlines():
-                parts = line.decode().split(" ", 2)
-                if len(parts) == 3 and parts[0] == "idx":
-                    records.append((parts[1], parts[2]))
-            self._toc_offset[ds_s] = off + consumed
-            # tailing a TOC being appended: conflicting read lock + stat
-            POSIX_STATS.account("toc_read", nbytes_r=consumed, locks=1, mds=1)
-        return records
 
     def _load_segment(self, ds_s: str, segname: str) -> dict[str, bytes]:
         segpath = os.path.join(self._root, ds_s, segname)
-        seg = self._segments.get(segpath)
-        if seg is None:
-            with open(segpath, "rb") as f:
-                raw = f.read()  # single read per segment file
-            POSIX_STATS.account("read_index_segment", nbytes_r=len(raw), locks=1, mds=1)
-            seg = {}
-            for line in raw.splitlines():
-                el, _, loc = line.partition(b"\t")
-                seg[el.decode()] = loc
-            self._segments[segpath] = seg
-        return seg
+        with self._mu:
+            seg = self._segments.get(segpath)
+            if seg is None:
+                with open(segpath, "rb") as f:
+                    raw = f.read()  # single read per segment file
+                POSIX_STATS.account("read_index_segment", nbytes_r=len(raw), locks=1, mds=1)
+                seg = {}
+                for line in raw.splitlines():
+                    el, _, loc = line.partition(b"\t")
+                    seg[el.decode()] = loc
+                self._segments[segpath] = seg
+            return seg
 
     def retrieve(self, dataset_key: Key, collocation_key: Key, element_key: Key) -> FieldLocation | None:
         ds_s = dataset_key.stringify()
@@ -142,6 +161,30 @@ class PosixCatalogue(Catalogue):
             if raw is not None:
                 return FieldLocation.decode(raw)
         return None
+
+    def retrieve_batch(self, triples) -> list[FieldLocation | None]:
+        """Batched lookup: the TOC of each distinct dataset is tailed once
+        (one stat + read-lock round) and its records reused for every lookup
+        of the batch, instead of one tail per retrieve."""
+        out: list[FieldLocation | None] = []
+        tailed: dict[str, list[tuple[str, str]]] = {}
+        for dataset_key, collocation_key, element_key, in triples:
+            ds_s = dataset_key.stringify()
+            records = tailed.get(ds_s)
+            if records is None:
+                records = tailed[ds_s] = list(self._tail_toc(ds_s))
+            co_s = collocation_key.stringify()
+            el_s = element_key.stringify()
+            found = None
+            for rec_co, segname in reversed(records):
+                if rec_co != co_s:
+                    continue
+                raw = self._load_segment(ds_s, segname).get(el_s)
+                if raw is not None:
+                    found = FieldLocation.decode(raw)
+                    break
+            out.append(found)
+        return out
 
     def list(self, request: Mapping[str, Iterable[str] | str]) -> Iterator[ListEntry]:
         ds_req, co_req, el_req = self.schema.request_levels(request)
@@ -183,6 +226,7 @@ class PosixCatalogue(Catalogue):
 
         ds_s = dataset_key.stringify()
         shutil.rmtree(os.path.join(self._root, ds_s), ignore_errors=True)
-        self._toc_offset.pop(ds_s, None)
-        self._toc_records.pop(ds_s, None)
+        with self._mu:
+            self._toc_offset.pop(ds_s, None)
+            self._toc_records.pop(ds_s, None)
         POSIX_STATS.account("wipe", mds=1)

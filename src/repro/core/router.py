@@ -1,0 +1,166 @@
+"""FDBRouter — multi-lane sharding across independent (Catalogue, Store) pairs.
+
+One FDB instance funnels every archive through a single Catalogue/Store
+pair; at scale that single lane becomes the bottleneck (one TOC per dataset
+on POSIX, one index-KV per collocation on DAOS).  The router shards *dataset
+keys* across N fully independent lanes:
+
+- each lane is any FDB-like object (a plain :class:`~repro.core.fdb.FDB`,
+  an :class:`~repro.core.async_fdb.AsyncFDB`, even another router) — lanes
+  may use DIFFERENT backends (e.g. hot datasets on DAOS, cold on POSIX);
+- placement is a stable hash of the stringified dataset key, so every field
+  of a dataset lives in exactly one lane and lookups need no broadcast;
+- ``flush()`` flushes each lane (each lane internally orders store before
+  catalogue, so the §1.3 invariant holds per lane — there is no cross-lane
+  ordering requirement because datasets are disjoint);
+- ``list()`` merges the per-lane listings (disjoint by construction, so the
+  merge is a plain concatenation, no dedup pass).
+
+All lanes must share one schema: the split and the hash must agree.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Iterable, Iterator, Mapping, Sequence
+
+from .catalogue import ListEntry
+from .datahandle import DataHandle
+from .keys import Key
+from .schema import Schema
+
+__all__ = ["FDBRouter", "make_router"]
+
+
+class FDBRouter:
+    def __init__(self, lanes: Sequence):
+        lanes = list(lanes)
+        if not lanes:
+            raise ValueError("router needs at least one lane")
+        self.lanes = lanes
+        self.schema: Schema = lanes[0].schema
+        for lane in lanes[1:]:
+            if lane.schema != self.schema:
+                raise ValueError(
+                    f"all lanes must share one schema: {lane.schema.name!r} != {self.schema.name!r}"
+                )
+
+    # ------------------------------------------------------------------ routing
+    def lane_index(self, key: Key | Mapping[str, str]) -> int:
+        """Stable hash of the stringified dataset sub-key -> lane."""
+        key = key if isinstance(key, Key) else Key(key)
+        ds = key.subset(self.schema.dataset_keys)
+        return zlib.crc32(ds.stringify().encode()) % len(self.lanes)
+
+    def _lane(self, key: Key | Mapping[str, str]):
+        return self.lanes[self.lane_index(key)]
+
+    # ---------------------------------------------------------------------- API
+    def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
+        self._lane(key).archive(key, data)
+
+    def archive_batch(self, items: Sequence[tuple[Key | Mapping[str, str], bytes]]) -> None:
+        groups: dict[int, list[tuple[Key | Mapping[str, str], bytes]]] = {}
+        for key, data in items:
+            groups.setdefault(self.lane_index(key), []).append((key, data))
+        for lane_i, group in groups.items():
+            self.lanes[lane_i].archive_batch(group)
+
+    def flush(self) -> None:
+        for lane in self.lanes:
+            lane.flush()
+
+    def retrieve(self, key: Key | Mapping[str, str]) -> DataHandle | None:
+        return self._lane(key).retrieve(key)
+
+    def _scatter(self, keys: Sequence[Key | Mapping[str, str]], method: str) -> list:
+        """Group *keys* by lane, call the lane's batch *method* per group,
+        reassemble results in input order."""
+        groups: dict[int, list[int]] = {}
+        for i, key in enumerate(keys):
+            groups.setdefault(self.lane_index(key), []).append(i)
+        out: list = [None] * len(keys)
+        for lane_i, idxs in groups.items():
+            results = getattr(self.lanes[lane_i], method)([keys[i] for i in idxs])
+            for i, r in zip(idxs, results):
+                out[i] = r
+        return out
+
+    def retrieve_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[DataHandle | None]:
+        return self._scatter(keys, "retrieve_batch")
+
+    def retrieve_many(self, request: Mapping[str, Iterable[str] | str]) -> dict[Key, DataHandle | None]:
+        keys = self.schema.expand(request)
+        return dict(zip(keys, self.retrieve_batch(keys)))
+
+    def read(self, key: Key | Mapping[str, str]) -> bytes | None:
+        return self._lane(key).read(key)
+
+    def read_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[bytes | None]:
+        return self._scatter(keys, "read_batch")
+
+    def list(self, request: Mapping[str, Iterable[str] | str] | None = None) -> Iterator[ListEntry]:
+        """Merged listing: lanes hold disjoint datasets, so concatenating
+        the per-lane iterators IS the merge."""
+        for lane in self.lanes:
+            yield from lane.list(request)
+
+    def wipe(self, dataset_key: Key | Mapping[str, str]) -> None:
+        self._lane(dataset_key).wipe(dataset_key)
+
+    def close(self) -> None:
+        # a failing lane must not leave the healthy ones unflushed: close
+        # every lane, then re-raise the first failure
+        first_err: Exception | None = None
+        for lane in self.lanes:
+            try:
+                lane.close()
+            except Exception as e:  # noqa: BLE001
+                first_err = first_err or e
+        if first_err is not None:
+            raise first_err
+
+    def __enter__(self) -> "FDBRouter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def make_router(
+    backend: str,
+    n_lanes: int,
+    *,
+    schema: Schema,
+    root: str | None = None,
+    engine=None,
+    pool: str = "fdb",
+    **kw,
+) -> FDBRouter:
+    """Build an N-lane router of homogeneous backends.
+
+    posix: lane *i* lives under ``root/lane{i}`` (independent TOCs/streams).
+    daos: lane *i* uses pool ``{pool}-lane{i}`` on a shared engine
+    (independent root containers and index KVs).
+    """
+    from .fdb import make_fdb
+
+    if n_lanes < 1:
+        raise ValueError("need at least one lane")
+    lanes = []
+    for i in range(n_lanes):
+        if backend == "posix":
+            if root is None:
+                raise ValueError("posix router requires root=")
+            import os
+
+            lanes.append(make_fdb("posix", schema=schema, root=os.path.join(root, f"lane{i}"), **kw))
+        elif backend == "daos":
+            if engine is None:
+                from .daos import DaosEngine
+
+                engine = DaosEngine()
+            lanes.append(make_fdb("daos", schema=schema, engine=engine, pool=f"{pool}-lane{i}", **kw))
+        else:
+            raise ValueError(f"unknown router backend {backend!r}")
+    return FDBRouter(lanes)

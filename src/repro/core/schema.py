@@ -90,6 +90,24 @@ class Schema:
     def element_from_string(self, s: str) -> Key:
         return Key.destringify(s, self.element_keys)
 
+    def expand(self, request: Mapping[str, Iterable[str] | str]) -> list[Key]:
+        """MARS-style request expansion: a request with multi-valued spans
+        (e.g. ``step=[0,1,2], param=[t,u]``) is the cartesian product of its
+        values — one full field identifier per combination, in schema
+        keyword order.  Every schema keyword must be present."""
+        import itertools
+
+        spans: list[list[tuple[str, str]]] = []
+        for kw in self.all_keys:
+            if kw not in request:
+                raise KeyError(f"request missing schema keyword {kw!r} (schema {self.name})")
+            v = request[kw]
+            vals = [v] if isinstance(v, str) else [str(x) for x in v]
+            if not vals:
+                raise ValueError(f"empty value span for keyword {kw!r}")
+            spans.append([(kw, val) for val in vals])
+        return [Key(combo) for combo in itertools.product(*spans)]
+
     def request_levels(self, request: Mapping[str, Iterable[str] | str]):
         """Split a (possibly partial) request's keywords by level."""
         ds = {k: v for k, v in request.items() if k in self.dataset_keys}

@@ -5,20 +5,26 @@ A Store backend implements bulk write/read of field data:
 - ``archive(data, dataset_key, collocation_key) -> FieldLocation`` — takes
   control of the data (optionally persisting it) and returns a unique
   location descriptor.  Must never overwrite a previously archived field.
+- ``archive_batch(items) -> [FieldLocation]`` — archive many fields in one
+  backend round; semantically equivalent to sequential ``archive`` calls,
+  but backends amortise per-call costs (lock acquisitions, OID allocation,
+  event-queue drains) across the batch.
 - ``flush()`` — blocks until everything archived by this process is persisted
   and accessible to external readers.
 - ``retrieve(location) -> DataHandle`` — backend-agnostic reader.
+- ``retrieve_batch(locations) -> [DataHandle | None]`` — vectored reader.
 """
 
 from __future__ import annotations
 
 import abc
 from dataclasses import dataclass
+from typing import Sequence, Tuple
 
 from .datahandle import DataHandle
 from .keys import Key
 
-__all__ = ["FieldLocation", "Store"]
+__all__ = ["FieldLocation", "Store", "ArchiveItem"]
 
 
 @dataclass(frozen=True)
@@ -42,8 +48,17 @@ class FieldLocation:
 
     @classmethod
     def decode(cls, raw: bytes) -> "FieldLocation":
-        scheme, uri, off, ln = raw.decode().split("|")
+        # The uri is backend-controlled and may itself contain '|' (e.g. a
+        # path): scheme is the first field (schemes are identifiers, never
+        # contain '|'), offset/length are the last two — everything between
+        # is the uri, recovered by splitting from the right.
+        scheme, rest = raw.decode().split("|", 1)
+        uri, off, ln = rest.rsplit("|", 2)
         return cls(scheme, uri, int(off), int(ln))
+
+
+#: one element of a Store batch: (data, dataset_key, collocation_key)
+ArchiveItem = Tuple[bytes, Key, Key]
 
 
 class Store(abc.ABC):
@@ -53,6 +68,11 @@ class Store(abc.ABC):
     def archive(self, data: bytes, dataset_key: Key, collocation_key: Key) -> FieldLocation:
         ...
 
+    def archive_batch(self, items: Sequence[tuple[bytes, Key, Key]]) -> list[FieldLocation]:
+        """Archive many fields at once.  Sequential default; backends
+        override to amortise per-call costs across the batch."""
+        return [self.archive(data, ds, co) for data, ds, co in items]
+
     @abc.abstractmethod
     def flush(self) -> None:
         ...
@@ -60,6 +80,10 @@ class Store(abc.ABC):
     @abc.abstractmethod
     def retrieve(self, location: FieldLocation) -> DataHandle:
         ...
+
+    def retrieve_batch(self, locations: Sequence[FieldLocation | None]) -> list[DataHandle | None]:
+        """Vectored ``retrieve``; None passes through (absent fields)."""
+        return [None if loc is None else self.retrieve(loc) for loc in locations]
 
     def close(self) -> None:  # release cached handles
         pass

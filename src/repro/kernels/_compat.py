@@ -1,0 +1,15 @@
+"""Version compatibility for the Pallas TPU API.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
+``CompilerParams`` across JAX releases; the kernels target the new spelling
+and this shim resolves whichever one the installed version provides, so all
+three kernels share one import site.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams"]
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._compat import CompilerParams
+
 __all__ = ["grib_pack_call", "grib_unpack_call"]
 
 
@@ -62,7 +64,7 @@ def grib_pack_call(
         ],
         out_specs=pl.BlockSpec((1, block_rows, w), lambda i, r: (i, r, 0)),
         out_shape=jax.ShapeDtypeStruct((f, h, w), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
@@ -92,7 +94,7 @@ def grib_unpack_call(
         ],
         out_specs=pl.BlockSpec((1, block_rows, w), lambda i, r: (i, r, 0)),
         out_shape=jax.ShapeDtypeStruct((f, h, w), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._compat import CompilerParams
+
 __all__ = ["ssd_scan_kernel", "ssd_scan_call"]
 
 
@@ -112,7 +114,7 @@ def ssd_scan_call(
         out_specs=pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -109,6 +109,12 @@ class ServeEngine:
             self.slot_pos[slot] = plen
             self.last_token[slot, 0] = nxt
             req.generated.append(nxt)
+            # the prefill itself may produce EOS (or exhaust the budget):
+            # finish without occupying a decode slot
+            if (req.eos_id is not None and nxt == req.eos_id) or req.max_new_tokens <= 1:
+                req.done = True
+                self._done.append(req)
+                self.slot_req[slot] = None
 
     def _decode_once(self) -> None:
         if self.active == 0:
@@ -126,12 +132,15 @@ class ServeEngine:
                 continue
             tok = int(jnp.argmax(logits[slot, : self.cfg.vocab]))
             self.slot_pos[slot] = new_pos[slot]
-            done = (
+            budget_done = (
                 len(req.generated) >= req.max_new_tokens
-                or (req.eos_id is not None and tok == req.eos_id)
                 or int(new_pos[slot]) >= self.cache_len - 1
             )
-            if done:
+            eos_done = req.eos_id is not None and tok == req.eos_id
+            if eos_done and not budget_done:
+                # EOS is part of the output, matching the prefill-EOS path
+                req.generated.append(tok)
+            if budget_done or eos_done:
                 req.done = True
                 self._done.append(req)
                 self.slot_req[slot] = None

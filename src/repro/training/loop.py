@@ -127,7 +127,7 @@ class Trainer:
                 self.params = None  # simulate losing device state
                 self.opt = None
                 self.resume_or_init()
-        self.ckpt.wait()
+        self.ckpt.close()  # drain + stop the background writer machinery
         return TrainReport(
             steps_run=n_steps, final_step=self.step, losses=losses,
             restarts=restarts, wall_s=time.time() - t0,

@@ -1,0 +1,277 @@
+"""Tests for the async, batched, multi-lane FDB I/O layer.
+
+Covers the three new pieces on BOTH backends:
+
+- batch operations are semantically equivalent to sequential calls;
+- AsyncFDB's flush barrier preserves the §1.3 ordering invariant — an
+  index entry can never point at unpersisted bytes;
+- FDBRouter shards datasets across lanes and merges list() across them.
+"""
+
+import threading
+
+import pytest
+
+from repro.core import (
+    AsyncFDB,
+    FDBRouter,
+    Key,
+    NWP_SCHEMA_DAOS,
+    NWP_SCHEMA_POSIX,
+    make_fdb,
+    make_router,
+)
+from repro.core.daos import DaosEngine
+
+
+def example_key(**over) -> Key:
+    base = dict(
+        **{"class": "od"}, stream="oper", expver="0001", date="20231201", time="1200",
+        type="ef", levtype="sfc", number="1", levelist="1", step="1", param="v",
+    )
+    base.update(over)
+    return Key(base)
+
+
+@pytest.fixture(params=["daos", "posix"])
+def fdb(request, tmp_path):
+    if request.param == "daos":
+        yield make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=DaosEngine())
+    else:
+        yield make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "fdb"))
+
+
+def make_pair(backend, tmp_path):
+    """Two handles over the same storage (writer + independent reader)."""
+    if backend == "daos":
+        eng = DaosEngine()
+        return (make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=eng),
+                make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=eng))
+    root = str(tmp_path / "fdb")
+    return (make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=root),
+            make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=root))
+
+
+class TestBatchEquivalence:
+    def test_archive_batch_equals_sequential(self, fdb):
+        items = [(example_key(step=str(s), param=p), f"{s}/{p}".encode())
+                 for s in range(5) for p in ("u", "v", "t")]
+        fdb.archive_batch(items)
+        fdb.flush()
+        for k, v in items:
+            assert fdb.read(k) == v
+        # listing sees exactly the batch
+        assert {e.key for e in fdb.list({})} == {k for k, _ in items}
+
+    def test_retrieve_batch_matches_singles_and_preserves_order(self, fdb):
+        items = [(example_key(step=str(s)), f"s{s}".encode()) for s in range(6)]
+        fdb.archive_batch(items)
+        fdb.flush()
+        keys = [k for k, _ in items][::-1] + [example_key(step="99")]  # absent last
+        handles = fdb.retrieve_batch(keys)
+        assert handles[-1] is None
+        got = [h.read() for h in handles[:-1]]
+        assert got == [f"s{s}".encode() for s in reversed(range(6))]
+        assert fdb.read_batch(keys)[:-1] == got
+
+    def test_batch_replacement_last_write_wins(self, fdb):
+        k = example_key()
+        fdb.archive_batch([(k, b"old"), (k, b"new")])
+        fdb.flush()
+        assert fdb.read(k) == b"new"
+
+    def test_retrieve_many_expands_request(self, fdb):
+        items = [(example_key(step=str(s), param=p), f"{s}{p}".encode())
+                 for s in range(3) for p in ("u", "v")]
+        fdb.archive_batch(items)
+        fdb.flush()
+        req = dict(example_key())
+        req["step"] = ["0", "1", "2"]
+        req["param"] = ["u", "v"]
+        got = fdb.retrieve_many(req)
+        assert len(got) == 6
+        for k, v in items:
+            assert got[k] is not None and got[k].read() == v
+
+    def test_batch_stats_amortisation_daos(self):
+        # the batched path must cost at most ONE oid allocation and ONE
+        # event-queue drain per (store, catalogue) batch, not one per field
+        eng = DaosEngine()
+        fdb = make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=eng)
+        items = [(example_key(step=str(s)), b"x" * 64) for s in range(8)]
+        eng.stats.reset()
+        fdb.archive_batch(items)
+        snap = eng.stats.snapshot()
+        assert snap["ops"]["daos_array_write"] == 8
+        assert snap["ops"].get("daos_cont_alloc_oids", 0) <= 2  # store + index kv
+        assert snap["ops"]["daos_eq_poll"] <= 2  # one store drain + one index drain
+
+    def test_batch_stats_single_lock_posix(self, tmp_path):
+        from repro.core.posix.stats import POSIX_STATS
+
+        fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "f"))
+        items = [(example_key(step=str(s)), b"x" * 64) for s in range(8)]
+        POSIX_STATS.reset()
+        fdb.archive_batch(items)
+        snap = POSIX_STATS.snapshot()
+        # one vectored write -> one extent lock for the whole batch
+        assert snap["ops"]["write_batch"] == 1
+        assert snap["ops"].get("write", 0) == 0
+
+
+class TestAsyncFDB:
+    @pytest.mark.parametrize("backend", ["daos", "posix"])
+    def test_flush_barrier_then_visible(self, backend, tmp_path):
+        writer, reader = make_pair(backend, tmp_path)
+        with AsyncFDB(writer, writers=3, batch_size=4) as afdb:
+            items = [(example_key(step=str(s), param=p), f"{s}{p}".encode())
+                     for s in range(6) for p in ("u", "v", "t")]
+            for k, v in items:
+                afdb.archive(k, v)
+            afdb.flush()
+            # after the barrier EVERY archived field is visible to a reader
+            for k, v in items:
+                assert reader.read(k) == v
+
+    @pytest.mark.parametrize("backend", ["daos", "posix"])
+    def test_index_never_points_at_unpersisted_bytes(self, backend, tmp_path):
+        """The ordering invariant under async writes: whatever subset of
+        fields a concurrent reader's list() exposes, the store bytes behind
+        every exposed location must already be readable and complete."""
+        writer, reader = make_pair(backend, tmp_path)
+        payload = bytes(range(256)) * 16
+        afdb = AsyncFDB(writer, writers=4, batch_size=4)
+        stop = threading.Event()
+        bad = []
+
+        def audit():
+            while not stop.is_set():
+                for entry in reader.list({}):
+                    try:
+                        got = reader.store.retrieve(entry.location).read()
+                    except Exception as e:  # noqa: BLE001 — dangling index entry
+                        bad.append((entry.key, repr(e)))
+                        continue
+                    if got != payload:
+                        bad.append((entry.key, f"torn read: {len(got)} bytes"))
+
+        t = threading.Thread(target=audit)
+        t.start()
+        try:
+            for s in range(24):
+                afdb.archive(example_key(step=str(s)), payload)
+                if s % 6 == 5:
+                    afdb.flush()
+            afdb.flush()
+        finally:
+            stop.set()
+            t.join()
+            afdb.close()
+        assert not bad, f"index pointed at unpersisted bytes: {bad[:3]}"
+
+    @pytest.mark.parametrize("backend", ["daos", "posix"])
+    def test_same_key_replacement_stays_ordered(self, backend, tmp_path):
+        """Re-archives of ONE key must stay last-write-wins through the
+        writer pool (keys are hash-partitioned to a single FIFO writer)."""
+        writer, reader = make_pair(backend, tmp_path)
+        with AsyncFDB(writer, writers=4, batch_size=2) as afdb:
+            k = example_key()
+            for i in range(50):
+                afdb.archive(k, f"v{i}".encode())
+            afdb.flush()
+            assert reader.read(k) == b"v49"
+
+    def test_writer_errors_surface_on_flush(self, tmp_path):
+        fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "f"))
+
+        def boom(items):
+            raise RuntimeError("backend down")
+
+        fdb.archive_batch = boom  # force the pool's backend call to fail
+        afdb = AsyncFDB(fdb, writers=1)
+        afdb.archive(example_key(), b"x")
+        with pytest.raises(RuntimeError, match="backend down"):
+            afdb.flush()
+
+    @pytest.mark.parametrize("backend", ["daos", "posix"])
+    def test_read_many_parallel_fanout(self, backend, tmp_path):
+        writer, reader = make_pair(backend, tmp_path)
+        items = [(example_key(step=str(s), param=p, levelist=str(lv)), f"{s}{p}{lv}".encode())
+                 for s in range(4) for p in ("u", "v") for lv in range(3)]
+        writer.archive_batch(items)
+        writer.flush()
+        with AsyncFDB(reader, read_batch_size=4) as afdb:
+            req = dict(example_key())
+            req.update(step=[str(s) for s in range(4)], param=["u", "v"],
+                       levelist=[str(lv) for lv in range(3)])
+            got = afdb.read_many(req)
+        assert len(got) == len(items)
+        for k, v in items:
+            assert got[k] == v
+
+
+class TestRouter:
+    DATES = ("20230101", "20230102", "20230103", "20230104")
+
+    @pytest.mark.parametrize("backend", ["daos", "posix"])
+    def test_two_lane_roundtrip_and_merged_list(self, backend, tmp_path):
+        router = (make_router("daos", 2, schema=NWP_SCHEMA_DAOS, engine=DaosEngine())
+                  if backend == "daos"
+                  else make_router("posix", 2, schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "r")))
+        items = [(example_key(date=d, step=str(s)), f"{d}/{s}".encode())
+                 for d in self.DATES for s in range(3)]
+        router.archive_batch(items)
+        router.flush()
+        for k, v in items:
+            assert router.read(k) == v
+        # merged list() across lanes covers every dataset exactly once
+        listed = {e.key for e in router.list({})}
+        assert listed == {k for k, _ in items}
+        # both lanes actually hold data (4 dates over 2 lanes by crc32)
+        per_lane = [sum(1 for _ in lane.list({})) for lane in router.lanes]
+        assert all(n > 0 for n in per_lane) and sum(per_lane) == len(items)
+
+    def test_dataset_affinity_is_stable(self, tmp_path):
+        router = make_router("posix", 3, schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "r"))
+        for d in self.DATES:
+            k = example_key(date=d)
+            assert router.lane_index(k) == router.lane_index(example_key(date=d, step="7", param="q"))
+
+    def test_mixed_backend_lanes(self, tmp_path):
+        lanes = [
+            make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=DaosEngine()),
+            make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=DaosEngine()),
+        ]
+        router = FDBRouter(lanes)
+        items = [(example_key(date=d), d.encode()) for d in self.DATES]
+        router.archive_batch(items)
+        router.flush()
+        assert router.read_batch([k for k, _ in items]) == [v for _, v in items]
+
+    def test_schema_mismatch_rejected(self, tmp_path):
+        lanes = [
+            make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=DaosEngine()),
+            make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "p")),
+        ]
+        with pytest.raises(ValueError):
+            FDBRouter(lanes)
+
+    def test_router_wipe_routes_to_owning_lane(self, tmp_path):
+        router = make_router("posix", 2, schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "r"))
+        items = [(example_key(date=d), d.encode()) for d in self.DATES]
+        router.archive_batch(items)
+        router.flush()
+        router.wipe(example_key(date=self.DATES[0]))
+        assert router.read(example_key(date=self.DATES[0])) is None
+        assert router.read(example_key(date=self.DATES[1])) == self.DATES[1].encode()
+
+    def test_async_over_router_composes(self, tmp_path):
+        router = make_router("posix", 2, schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "r"))
+        with AsyncFDB(router, writers=2, owns_fdb=True) as afdb:
+            items = [(example_key(date=d, step=str(s)), f"{d}{s}".encode())
+                     for d in self.DATES for s in range(2)]
+            for k, v in items:
+                afdb.archive(k, v)
+            afdb.flush()
+            for k, v in items:
+                assert afdb.read(k) == v

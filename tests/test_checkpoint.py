@@ -113,6 +113,15 @@ class TestCheckpointManager:
         mgr.wipe_run()
         assert mgr.available_steps() == []
 
+    def test_close_stops_background_machinery(self, fdb):
+        with CheckpointManager(fdb, "runX", async_mode=True) as mgr:
+            mgr.save(1, small_state())
+        # context exit drained the queue and stopped the writer threads;
+        # the caller's FDB stays usable
+        mgr2 = CheckpointManager(fdb, "runX", async_mode=False)
+        assert mgr2.available_steps() == [1]
+        mgr2.close()
+
 
 ELASTIC_SCRIPT = r"""
 import os

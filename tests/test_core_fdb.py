@@ -245,6 +245,19 @@ class TestSchema:
         assert "number" in NWP_SCHEMA_POSIX.element_keys
 
 
+def _hammer_child(member: int, sockpath: str):
+    # module-level so the 'spawn' start method can pickle it by reference
+    from repro.core import NWP_SCHEMA_DAOS, make_fdb
+    from repro.core.daos.server import DaosClient
+
+    cli = DaosClient(sockpath)
+    fdb = make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=cli)
+    for step in range(4):
+        fdb.archive(example_key(number=str(member), step=str(step)), f"m{member}s{step}".encode())
+    fdb.flush()
+    cli.close()
+
+
 def test_multiprocess_daos_server(tmp_path):
     """True OS-process contention through the socket-served engine."""
     import multiprocessing as mp
@@ -254,19 +267,10 @@ def test_multiprocess_daos_server(tmp_path):
     sock = str(tmp_path / "daos.sock")
     srv = serve_engine(sock)
     try:
-        def child(member: int, sockpath: str):
-            from repro.core import NWP_SCHEMA_DAOS, make_fdb
-            from repro.core.daos.server import DaosClient
-
-            cli = DaosClient(sockpath)
-            fdb = make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=cli)
-            for step in range(4):
-                fdb.archive(example_key(number=str(member), step=str(step)), f"m{member}s{step}".encode())
-            fdb.flush()
-            cli.close()
-
-        ctx = mp.get_context("fork")
-        procs = [ctx.Process(target=child, args=(m, sock)) for m in range(3)]
+        # spawn, not fork: the test process holds JAX's thread pools, and
+        # os.fork() from a multithreaded process can deadlock the children
+        ctx = mp.get_context("spawn")
+        procs = [ctx.Process(target=_hammer_child, args=(m, sock)) for m in range(3)]
         for p in procs:
             p.start()
         for p in procs:

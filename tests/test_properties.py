@@ -7,7 +7,7 @@ import pytest
 
 from proptest import Rand, forall
 
-from repro.core import FDB, Key, NWP_SCHEMA_DAOS, NWP_SCHEMA_POSIX, make_fdb
+from repro.core import FDB, FieldLocation, Key, NWP_SCHEMA_DAOS, NWP_SCHEMA_POSIX, make_fdb
 from repro.core.daos import DaosEngine
 from repro.core.daos.objects import ArrayObject, KVObject, ObjectId
 
@@ -32,6 +32,18 @@ class TestKeyProperties:
         k = Key(vals)
         split = NWP_SCHEMA_DAOS.split(k)
         assert split.full() == k
+
+
+class TestFieldLocationProperties:
+    @forall()
+    def test_encode_decode_roundtrip_with_hostile_uris(self, r: Rand):
+        # uris are backend-controlled strings and may contain the '|' field
+        # separator (paths, pool/cont/oid spellings, …) — decode must split
+        # from the right, so any uri round-trips
+        hostile = "|/.:-_"
+        uri = "".join(r.choice("abc0" + hostile) for _ in range(r.int(1, 40)))
+        loc = FieldLocation(r.choice(["posix", "daos"]), uri, r.int(0, 1 << 40), r.int(0, 1 << 30))
+        assert FieldLocation.decode(loc.encode()) == loc
 
 
 class TestMVCCProperties:
