@@ -22,13 +22,22 @@ Bandwidths use *global timing* (paper §4.3): total bytes / (last I/O end −
 first I/O start).
 
     PYTHONPATH=src python benchmarks/fdb_hammer.py --procs 4
+
+Contended client-scaling sweep (paper Figs 3/4: per-client bandwidth under
+rising client counts) — drives the real backends through the contention
+model (:mod:`repro.metrics.contention`) on a deterministic virtual clock
+and writes per-backend/per-``n_procs`` aggregate bandwidth + p50/p95/p99 op
+latencies to ``BENCH_contention.json``:
+
+    PYTHONPATH=src python benchmarks/fdb_hammer.py --scaling --procs 32
 """
 
 from __future__ import annotations
 
+import json
 import threading
 import time
-from dataclasses import dataclass, replace
+from dataclasses import asdict, dataclass, replace
 
 import numpy as np
 
@@ -42,8 +51,16 @@ from repro.core import (
     make_router,
 )
 from repro.core.daos import DaosEngine
+from repro.core.posix import PosixStats
+from repro.metrics import make_contention
 
-__all__ = ["HammerSpec", "run_hammer", "make_backend"]
+__all__ = [
+    "HammerSpec",
+    "run_hammer",
+    "make_backend",
+    "run_hammer_contended",
+    "scaling_sweep",
+]
 
 GiB = float(1 << 30)
 
@@ -75,6 +92,8 @@ def make_backend(
     engine: DaosEngine | None = None,
     *,
     lanes: int = 1,
+    stats=None,
+    contention=None,
 ):
     """Build the FDB under test: a single-lane FDB, or an N-lane router."""
     if backend not in ("daos", "posix"):
@@ -82,11 +101,14 @@ def make_backend(
     schema = NWP_SCHEMA_DAOS if backend == "daos" else NWP_SCHEMA_POSIX
     if lanes > 1:
         if backend == "daos":
-            return make_router("daos", lanes, schema=schema, engine=engine or DaosEngine())
-        return make_router("posix", lanes, schema=schema, root=root)
+            return make_router(
+                "daos", lanes, schema=schema,
+                engine=engine or DaosEngine(contention=contention), contention=contention,
+            )
+        return make_router("posix", lanes, schema=schema, root=root, stats=stats, contention=contention)
     if backend == "daos":
-        return make_fdb("daos", schema=schema, engine=engine or DaosEngine())
-    return make_fdb("posix", schema=schema, root=root)
+        return make_fdb("daos", schema=schema, engine=engine or DaosEngine(contention=contention))
+    return make_fdb("posix", schema=schema, root=root, stats=stats, contention=contention)
 
 
 def _field_key(member: int, step: int, param: int, level: int, n_datasets: int = 1) -> Key:
@@ -205,6 +227,184 @@ def sweep(spec: HammerSpec, backends=("daos", "posix"), lanes_sweep=(1, 2)) -> l
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Contended client-scaling sweep (paper Figs 3/4)
+# ---------------------------------------------------------------------------
+
+def _proc_quanta(handle, spec: HammerSpec, member: int, mode: str, payload: bytes):
+    """One hammer process as a generator of per-field backend quanta — the
+    deterministic scheduler interleaves processes between quanta."""
+    for step in range(spec.n_steps):
+        keys = _step_keys(spec, member, step)
+        if mode == "archive":
+            if spec.io == "batched":
+                handle.archive_batch([(k, payload) for k in keys])
+                yield
+            else:
+                for k in keys:
+                    handle.archive(k, payload)
+                    yield
+            handle.flush()  # once per output step, as the I/O servers do
+            yield
+        elif mode == "retrieve":
+            if spec.io == "batched":
+                datas = handle.read_batch(keys)
+                assert all(d is not None and len(d) == spec.field_size for d in datas)
+                yield
+            else:
+                for k in keys:
+                    data = handle.read(k)
+                    assert data is not None and len(data) == spec.field_size
+                    yield
+        else:
+            raise ValueError(mode)
+
+
+def run_hammer_contended(fdb, spec: HammerSpec, mode: str, model) -> dict:
+    """Drive ``spec.n_procs`` emulated processes through *fdb* under the
+    contention *model* on its virtual clock.
+
+    Deterministic discrete-event schedule: processes run as generators on
+    ONE thread, and the process with the earliest virtual clock always
+    executes its next quantum, so ops hit the model's resource timelines in
+    near-arrival order (the gap-filling timelines absorb the within-quantum
+    reordering) and the numbers are bit-identical on every run.  Bandwidths
+    use global timing (paper §4.3) on the virtual clock.
+    """
+    import heapq
+
+    payload = np.random.default_rng(0).bytes(spec.field_size)
+    clients = [model.new_client(f"proc{m}") for m in range(spec.n_procs)]
+    gens = [_proc_quanta(fdb, spec, m, mode, payload) for m in range(spec.n_procs)]
+    heap: list[tuple[float, int]] = [(0.0, m) for m in range(spec.n_procs)]
+    heapq.heapify(heap)
+    since_prune = 0
+    while heap:
+        _, m = heapq.heappop(heap)
+        with model.bind(clients[m]):
+            try:
+                next(gens[m])
+            except StopIteration:
+                continue
+        heapq.heappush(heap, (clients[m].t, m))
+        since_prune += 1
+        if since_prune >= 256:  # bound timeline growth: nothing dispatches
+            since_prune = 0     # before the earliest live clock
+            model.prune(heap[0][0])
+    span = max(c.t for c in clients)
+    bytes_per_proc = spec.fields_per_proc * spec.field_size
+    per_proc = [bytes_per_proc / c.t / GiB for c in clients]
+    return {
+        "mode": mode,
+        "n_procs": spec.n_procs,
+        "span_s": span,
+        "agg_GiBps": spec.total_bytes / span / GiB,
+        "per_proc_GiBps": per_proc,
+        "per_proc_GiBps_mean": sum(per_proc) / len(per_proc),
+        "us_per_field": 1e6 * span / max(1, spec.fields_per_proc * spec.n_procs),
+    }
+
+
+def _latency_summary(snapshot: dict) -> dict:
+    return {
+        op: {"p50_s": h["p50_s"], "p95_s": h["p95_s"], "p99_s": h["p99_s"], "count": h["count"]}
+        for op, h in snapshot.get("latency", {}).items()
+    }
+
+
+def analytic_curve(backend: str, procs_list, spec: HammerSpec) -> list[dict]:
+    """Cross-check curve from the closed-form bottleneck model
+    (:mod:`repro.simulation.cluster`): same client scaling, steady state
+    (large field count washes out the fixed startup term)."""
+    from repro.simulation.cluster import Workload, simulate
+
+    rows = []
+    for n in procs_list:
+        w = Workload(
+            n_server_nodes=1, n_client_nodes=1, procs_per_client=n,
+            fields_per_proc=2000, field_size=spec.field_size, mode="write",
+            contention=n > 1, n_opposing_procs=max(0, n - 1),
+            flush_every=spec.n_params * spec.n_levels,
+        )
+        res = simulate("lustre" if backend == "posix" else "daos", w)
+        rows.append(
+            {"n_procs": n, "agg_GiBps": res.bandwidth_GiBps,
+             "per_proc_GiBps": res.bandwidth_GiBps / n}
+        )
+    return rows
+
+
+def find_knee(per_proc_curve: list[float], procs_list) -> int:
+    """The contention knee: the client count with peak per-process
+    bandwidth (degradation is monotone beyond it)."""
+    i = max(range(len(per_proc_curve)), key=lambda j: per_proc_curve[j])
+    return procs_list[i]
+
+
+def scaling_sweep(
+    spec: HammerSpec,
+    backends=("posix", "daos"),
+    procs_list=(1, 2, 4, 8, 16, 32),
+    *,
+    virtual: bool = True,
+    out: str | None = "BENCH_contention.json",
+) -> dict:
+    """The paper's client-scaling experiment: fresh backend + contention
+    model per cell, archive then retrieve, per-proc and aggregate bandwidth
+    plus latency percentiles from the metrics package; the analytical curve
+    from :mod:`repro.simulation.cluster` rides along for cross-checking."""
+    import tempfile
+
+    results: dict = {
+        "spec": asdict(spec),
+        "virtual_clock": virtual,
+        "procs_list": list(procs_list),
+        "backends": {},
+    }
+    for backend in backends:
+        rows = []
+        for n in procs_list:
+            cell = replace(spec, n_procs=n)
+            model = make_contention(backend, virtual=virtual)
+            with tempfile.TemporaryDirectory() as td:
+                stats = PosixStats(name=f"{backend}-x{n}") if backend == "posix" else None
+                fdb = make_backend(backend, root=td, engine=None, stats=stats, contention=model)
+                try:
+                    w = run_hammer_contended(fdb, cell, "archive", model)
+                    w["latency"] = _latency_summary(fdb.stats_snapshot())
+                    for s in fdb.io_stats():
+                        s.reset()
+                    # the retrieve phase is a NEW epoch: its clients restart
+                    # at t=0, so residual archive busy intervals must not
+                    # queue phantom waits (writer registration — the lock
+                    # holders reads conflict with — survives, as intended)
+                    model.prune(float("inf"))
+                    r = run_hammer_contended(fdb, cell, "retrieve", model)
+                    r["latency"] = _latency_summary(fdb.stats_snapshot())
+                finally:
+                    fdb.close()
+            rows.append({"n_procs": n, "write": w, "read": r})
+        per_proc = [row["write"]["per_proc_GiBps_mean"] for row in rows]
+        results["backends"][backend] = {
+            "sweep": rows,
+            "knee_n_procs": find_knee(per_proc, list(procs_list)),
+            "analytic": analytic_curve(backend, procs_list, spec),
+        }
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+    return results
+
+
+def _pow2_upto(n: int) -> list[int]:
+    out = [1]
+    while out[-1] * 2 <= n:
+        out.append(out[-1] * 2)
+    if out[-1] != n:
+        out.append(n)
+    return out
+
+
 def main() -> None:
     import argparse
 
@@ -216,10 +416,36 @@ def main() -> None:
     ap.add_argument("--field-size", type=int, default=1 << 16)
     ap.add_argument("--backends", nargs="+", default=["daos", "posix"])
     ap.add_argument("--lanes", nargs="+", type=int, default=[1, 2])
+    ap.add_argument("--scaling", action="store_true",
+                    help="contended client-scaling sweep (1..procs, powers of two) "
+                         "through the contention model on a virtual clock")
+    ap.add_argument("--io", choices=IO_MODES, default="sync")
+    ap.add_argument("--out", default="BENCH_contention.json",
+                    help="output JSON for --scaling")
     args = ap.parse_args()
 
     spec = HammerSpec(n_procs=args.procs, n_steps=args.steps, n_params=args.params,
-                      n_levels=args.levels, field_size=args.field_size)
+                      n_levels=args.levels, field_size=args.field_size, io=args.io)
+
+    if args.scaling:
+        procs_list = _pow2_upto(args.procs)
+        print(f"fdb-hammer scaling sweep (virtual clock): n_procs in {procs_list}, "
+              f"{spec.fields_per_proc} fields x {spec.field_size} B per proc\n")
+        results = scaling_sweep(spec, backends=tuple(args.backends),
+                                procs_list=procs_list, out=args.out)
+        print(f"{'backend':8s} {'procs':>5s} {'write agg':>10s} {'write/proc':>11s} "
+              f"{'read/proc':>10s} {'w p99 us':>9s}")
+        for backend, data in results["backends"].items():
+            for row in data["sweep"]:
+                w, r = row["write"], row["read"]
+                p99 = max((v["p99_s"] for v in w["latency"].values()), default=0.0)
+                print(f"{backend:8s} {row['n_procs']:5d} {w['agg_GiBps']:10.3f} "
+                      f"{w['per_proc_GiBps_mean']:11.3f} {r['per_proc_GiBps_mean']:10.3f} "
+                      f"{1e6 * p99:9.1f}")
+            print(f"{backend:8s} knee at n_procs={data['knee_n_procs']}")
+        print(f"\nwrote {args.out}")
+        return
+
     print(f"fdb-hammer: {spec.n_procs} procs x {spec.fields_per_proc} fields "
           f"x {spec.field_size} B  ({spec.total_bytes / GiB:.3f} GiB)\n")
     print(f"{'backend':8s} {'lanes':>5s} {'io':>8s} {'write GiB/s':>12s} {'read GiB/s':>11s} {'us/field(w)':>12s}")

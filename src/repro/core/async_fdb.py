@@ -35,9 +35,11 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Iterable, Iterator, Mapping, Sequence
 
+from ..metrics.iostats import IOStats
 from .catalogue import ListEntry
 from .datahandle import DataHandle
 from .keys import Key
@@ -68,6 +70,9 @@ class AsyncFDB:
         self._read_batch_size = max(1, read_batch_size)
         self._readers = max(1, readers)
         self._owns_fdb = owns_fdb
+        #: facade-level telemetry: queue wait (enqueue -> backend hand-off),
+        #: per-batch landing time, coalesced batch sizes
+        self.async_stats = IOStats("async")
         # one queue per writer, identifiers hash-partitioned across them:
         # a key's archives are FIFO through its single writer (last-write-
         # wins survives), while distinct keys still fill every lane
@@ -85,6 +90,26 @@ class AsyncFDB:
             t.start()
 
     # ------------------------------------------------------------ writer pool
+    def _archive_batch_now(self, batch) -> None:
+        """Hand one coalesced batch to the backend; errors are captured for
+        the caller-facing methods, telemetry recorded either way."""
+        t0 = time.perf_counter()
+        try:
+            self.fdb.archive_batch([(key, data) for key, data, _ in batch])
+        except Exception as e:  # noqa: BLE001 — surfaced on archive/flush
+            with self._err_mu:
+                self._errors.append(e)
+        finally:
+            dt = time.perf_counter() - t0
+            # facade-level telemetry only: payload bytes are NOT accounted
+            # here — the backend store already counts them, and a merged
+            # stats_snapshot() must not double-count (nor count bytes for a
+            # batch whose backend call failed)
+            records = [("async_queue_wait", {"seconds": t0 - t_enq}) for _, _, t_enq in batch]
+            records.append(("async_archive_batch", {"seconds": dt}))
+            records.append(("async_batch_fields", {"count": len(batch)}))
+            self.async_stats.record_burst(records)
+
     def _writer_loop(self, q: queue.Queue) -> None:
         while True:
             item = q.get()
@@ -102,10 +127,7 @@ class AsyncFDB:
                 if nxt is _STOP:
                     # keep the sentinel last: finish this batch, then exit
                     try:
-                        self.fdb.archive_batch(batch)
-                    except Exception as e:  # noqa: BLE001
-                        with self._err_mu:
-                            self._errors.append(e)
+                        self._archive_batch_now(batch)
                     finally:
                         for _ in batch:
                             q.task_done()
@@ -113,10 +135,7 @@ class AsyncFDB:
                     return
                 batch.append(nxt)
             try:
-                self.fdb.archive_batch(batch)
-            except Exception as e:  # noqa: BLE001 — surfaced on archive/flush
-                with self._err_mu:
-                    self._errors.append(e)
+                self._archive_batch_now(batch)
             finally:
                 for _ in batch:
                     q.task_done()
@@ -135,7 +154,7 @@ class AsyncFDB:
         self._raise_pending()
         key = key if isinstance(key, Key) else Key(key)
         self.schema.validate(key)  # fail fast, in the caller, not the pool
-        self._qs[hash(key) % len(self._qs)].put((key, bytes(data)))
+        self._qs[hash(key) % len(self._qs)].put((key, bytes(data), time.perf_counter()))
 
     def archive_batch(self, items: Sequence[tuple[Key | Mapping[str, str], bytes]]) -> None:
         for key, data in items:
@@ -207,6 +226,16 @@ class AsyncFDB:
     @property
     def catalogue(self):
         return self.fdb.catalogue
+
+    # ------------------------------------------------------------- telemetry
+    def io_stats(self) -> list:
+        """Backend stats plus this facade's queue/batch telemetry."""
+        getter = getattr(self.fdb, "io_stats", None)
+        below = list(getter()) if getter is not None else []
+        return below + [self.async_stats]
+
+    def stats_snapshot(self) -> dict:
+        return IOStats.merged(self.io_stats()).snapshot()
 
     def list(self, request: Mapping[str, Iterable[str] | str] | None = None) -> Iterator[ListEntry]:
         return self.fdb.list(request)

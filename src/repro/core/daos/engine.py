@@ -2,9 +2,16 @@
 
 Exposes a flat RPC-style API mirroring the libdaos calls the FDB backends
 use.  Every call is accounted in :class:`DaosStats` (op counts, bytes moved,
-per-target distribution) — the benchmark cost model replays these counters
-through the latency model to produce the paper's scaling curves, and the
-profiling benchmark (paper Fig. 5) groups wall-time by these op names.
+per-target distribution, latency histograms) — the benchmark cost model
+replays these counters through the latency model to produce the paper's
+scaling curves, and the profiling benchmark (paper Fig. 5) groups wall-time
+by these op names.
+
+With a :class:`~repro.metrics.DaosContention` model attached, each op is
+additionally charged its scale-faithful service time at its target's queue
+(metadata spread over all engines, MVCC contention resolved server-side),
+and batched multi-ops overlap their per-target services under a single
+event-queue drain (paper §3.1.2).
 
 Thread-safe; also servable over a Unix socket for true multi-process
 contention tests (:mod:`repro.core.daos.server`).
@@ -14,9 +21,8 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import Counter
-from dataclasses import dataclass, field
 
+from ...metrics.iostats import IOStats
 from .objects import OC_S1, ArrayObject, KVObject, ObjectId, hash_dkey_to_target
 from .pool import Container, Pool
 
@@ -31,29 +37,23 @@ class DaosError(OSError):
         super().__init__(errno_, msg)
 
 
-@dataclass
-class DaosStats:
-    ops: Counter = field(default_factory=Counter)
-    op_time: Counter = field(default_factory=Counter)  # seconds per op name
-    bytes_written: int = 0
-    bytes_read: int = 0
-    target_ops: Counter = field(default_factory=Counter)
+class DaosStats(IOStats):
+    """DAOS-flavoured :class:`IOStats`: the per-shard distribution is the
+    per-*target* op count.  snapshot()/reset() are atomic with respect to
+    concurrent accounting (both run under the stats lock — the seed kept the
+    lock in the engine and bypassed it here)."""
+
+    def __init__(self, name: str = "daos"):
+        super().__init__(name)
+
+    @property
+    def target_ops(self):
+        return self.shard_ops
 
     def snapshot(self) -> dict:
-        return {
-            "ops": dict(self.ops),
-            "op_time": dict(self.op_time),
-            "bytes_written": self.bytes_written,
-            "bytes_read": self.bytes_read,
-            "target_ops": dict(self.target_ops),
-        }
-
-    def reset(self) -> None:
-        self.ops.clear()
-        self.op_time.clear()
-        self.bytes_written = 0
-        self.bytes_read = 0
-        self.target_ops.clear()
+        snap = super().snapshot()
+        snap["target_ops"] = {int(k): v for k, v in snap.pop("shard_ops").items()}
+        return snap
 
 
 class DaosEngine:
@@ -61,30 +61,42 @@ class DaosEngine:
 
     ``n_engines`` × ``targets_per_engine`` gives the target count used for
     dkey placement accounting (paper test system: 2 engines/node, 12
-    targets/engine).
+    targets/engine).  ``contention`` (a
+    :class:`~repro.metrics.DaosContention`) makes every op cost its at-scale
+    service time on the caller's clock.
     """
 
-    def __init__(self, n_engines: int = 2, targets_per_engine: int = 12):
+    def __init__(self, n_engines: int = 2, targets_per_engine: int = 12, *, contention=None):
         self.n_engines = n_engines
         self.targets_per_engine = targets_per_engine
         self._pools: dict[str, Pool] = {}
         self._mu = threading.Lock()
         self.stats = DaosStats()
-        self._stats_mu = threading.Lock()
+        self.contention = contention
 
     # ------------------------------------------------------------------ util
     @property
     def n_targets(self) -> int:
         return self.n_engines * self.targets_per_engine
 
-    def _account(self, op: str, *, dkey: str | None = None, nbytes_w: int = 0, nbytes_r: int = 0, dt: float = 0.0) -> None:
-        with self._stats_mu:
-            self.stats.ops[op] += 1
-            self.stats.op_time[op] += dt
-            self.stats.bytes_written += nbytes_w
-            self.stats.bytes_read += nbytes_r
-            if dkey is not None:
-                self.stats.target_ops[hash_dkey_to_target(dkey, self.n_targets)] += 1
+    def _target(self, dkey: str | None) -> int | None:
+        return None if dkey is None else hash_dkey_to_target(dkey, self.n_targets)
+
+    def _account(
+        self,
+        op: str,
+        *,
+        dkey: str | None = None,
+        nbytes_w: int = 0,
+        nbytes_r: int = 0,
+        dt: float = 0.0,
+    ) -> None:
+        target = self._target(dkey)
+        if self.contention is not None:
+            # the emulated at-scale latency REPLACES the wall time: telemetry
+            # stays scale-faithful and deterministic under the virtual clock
+            dt = self.contention.op(op, target, nbytes_w, nbytes_r)
+        self.stats.record(op, seconds=dt, nbytes_w=nbytes_w, nbytes_r=nbytes_r, shard=target)
 
     # ------------------------------------------------------------- pool mgmt
     def create_pool(self, label: str, *, exist_ok: bool = True) -> Pool:
@@ -140,7 +152,7 @@ class DaosEngine:
         Clients pre-allocate and cache ranges (paper §3.1.2)."""
         t0 = time.perf_counter()
         base = self._cont(pool, cont).alloc_oids(count)
-        self._account("daos_cont_alloc_oids", dt=time.perf_counter() - t0)
+        self._account("daos_cont_alloc_oids", dkey=f"{cont}/__oids__", dt=time.perf_counter() - t0)
         return base
 
     def _cont(self, pool: str, cont: str) -> Container:
@@ -189,7 +201,7 @@ class DaosEngine:
             self._account("daos_kv_list", dt=time.perf_counter() - t0)
             return []
         keys = kv.list_keys()
-        self._account("daos_kv_list", dt=time.perf_counter() - t0)
+        self._account("daos_kv_list", dkey=f"{cont}/{oid}", dt=time.perf_counter() - t0)
         return keys
 
     # ---------------------------------------------------------- event queues
@@ -207,44 +219,46 @@ class DaosEngine:
     # I/O idiom; the multi calls below are that burst as ONE engine round —
     # per-op work still accounted per op, but the client pays a single
     # round-trip (here: one accounting/lock round) for the whole batch.
+    # Under contention, the burst's per-target services overlap and the one
+    # completion drain carries the burst latency.
+
+    def _account_burst(self, burst, dt: float) -> None:
+        """Account a list of ``(op, dkey, nbytes_w, nbytes_r)`` completed by
+        one event-queue drain."""
+        targeted = [(op, self._target(dkey), nw, nr) for op, dkey, nw, nr in burst]
+        if self.contention is not None:
+            dt = self.contention.burst(targeted)  # replaces wall time
+        records = [
+            (op, {"nbytes_w": nw, "nbytes_r": nr, "shard": target})
+            for op, target, nw, nr in targeted
+        ]
+        # the drain is where a batched client actually waits: the burst's
+        # overlapped completion latency lands on its histogram
+        records.append(("daos_eq_poll", {"seconds": dt}))
+        self.stats.record_burst(records)
 
     def array_write_multi(self, pool: str, cont: str, writes, *, cell_size: int = 1, chunk_size: int = 1 << 20, oclass: str = OC_S1) -> None:
         """Burst of ``(oid, offset, data)`` open-with-attrs + writes,
         completed by one event-queue drain."""
         t0 = time.perf_counter()
         c = self._cont(pool, cont)
-        total = 0
+        burst = []
         for oid, offset, data in writes:
             arr = c.open_array_with_attrs(oid, cell_size=cell_size, chunk_size=chunk_size, oclass=oclass)
             arr.write(offset, data)
-            total += len(data)
-        dt = time.perf_counter() - t0
-        with self._stats_mu:
-            n = len(writes)
-            self.stats.ops["daos_array_open_with_attrs"] += n
-            self.stats.ops["daos_array_write"] += n
-            self.stats.ops["daos_eq_poll"] += 1
-            self.stats.op_time["daos_array_write"] += dt
-            self.stats.bytes_written += total
-            for oid, _, _ in writes:
-                self.stats.target_ops[hash_dkey_to_target(f"{cont}/{oid}", self.n_targets)] += 1
+            burst.append(("daos_array_open_with_attrs", f"{cont}/{oid}", 0, 0))
+            burst.append(("daos_array_write", f"{cont}/{oid}", len(data), 0))
+        self._account_burst(burst, time.perf_counter() - t0)
 
     def kv_put_multi(self, pool: str, cont: str, puts, *, oclass: str = OC_S1) -> None:
         """Burst of ``(oid, key, value)`` transactional inserts, one drain."""
         t0 = time.perf_counter()
         c = self._cont(pool, cont)
-        total = 0
+        burst = []
         for oid, key, value in puts:
             c.open_kv(oid, create=True, oclass=oclass).put(key, value)
-            total += len(value)
-        dt = time.perf_counter() - t0
-        with self._stats_mu:
-            self.stats.ops["daos_kv_put"] += len(puts)
-            self.stats.ops["daos_eq_poll"] += 1
-            self.stats.op_time["daos_kv_put"] += dt
-            self.stats.bytes_written += total
-            for oid, key, _ in puts:
-                self.stats.target_ops[hash_dkey_to_target(f"{cont}/{oid}/{key}", self.n_targets)] += 1
+            burst.append(("daos_kv_put", f"{cont}/{oid}/{key}", len(value), 0))
+        self._account_burst(burst, time.perf_counter() - t0)
 
     def kv_get_multi(self, pool: str, cont: str, gets) -> list:
         """Burst of ``(oid, key)`` lookups, one drain; absent keys -> None."""
@@ -254,7 +268,7 @@ class DaosEngine:
         except DaosError:
             c = None
         out: list = []
-        total = 0
+        burst = []
         for oid, key in gets:
             v = None
             if c is not None:
@@ -263,15 +277,8 @@ class DaosEngine:
                 except KeyError:
                     v = None
             out.append(v)
-            total += 0 if v is None else len(v)
-        dt = time.perf_counter() - t0
-        with self._stats_mu:
-            self.stats.ops["daos_kv_get"] += len(gets)
-            self.stats.ops["daos_eq_poll"] += 1
-            self.stats.op_time["daos_kv_get"] += dt
-            self.stats.bytes_read += total
-            for oid, key in gets:
-                self.stats.target_ops[hash_dkey_to_target(f"{cont}/{oid}/{key}", self.n_targets)] += 1
+            burst.append(("daos_kv_get", f"{cont}/{oid}/{key}", 0, 0 if v is None else len(v)))
+        self._account_burst(burst, time.perf_counter() - t0)
         return out
 
     # -------------------------------------------------------------- Array API
@@ -281,12 +288,12 @@ class DaosEngine:
             self._cont(pool, cont).create_array(oid, oclass=oclass, cell_size=cell_size, chunk_size=chunk_size)
         except FileExistsError as e:
             raise DaosError(EEXIST, str(e)) from e
-        self._account("daos_array_create", dt=time.perf_counter() - t0)
+        self._account("daos_array_create", dkey=f"{cont}/{oid}", dt=time.perf_counter() - t0)
 
     def array_open_with_attrs(self, pool: str, cont: str, oid: ObjectId, *, cell_size: int = 1, chunk_size: int = 1 << 20, oclass: str = OC_S1) -> None:
         t0 = time.perf_counter()
         self._cont(pool, cont).open_array_with_attrs(oid, cell_size=cell_size, chunk_size=chunk_size, oclass=oclass)
-        self._account("daos_array_open_with_attrs", dt=time.perf_counter() - t0)
+        self._account("daos_array_open_with_attrs", dkey=f"{cont}/{oid}", dt=time.perf_counter() - t0)
 
     def array_write(self, pool: str, cont: str, oid: ObjectId, offset: int, data: bytes) -> None:
         t0 = time.perf_counter()
@@ -315,5 +322,5 @@ class DaosEngine:
         except FileNotFoundError as e:
             raise DaosError(ENOENT, str(e)) from e
         n = arr.get_size()
-        self._account("daos_array_get_size", dt=time.perf_counter() - t0)
+        self._account("daos_array_get_size", dkey=f"{cont}/{oid}", dt=time.perf_counter() - t0)
         return n

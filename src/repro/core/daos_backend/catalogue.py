@@ -54,6 +54,11 @@ class DaosCatalogue(Catalogue):
         self._index_cache: dict[tuple[str, str], ObjectId] = {}  # (cont, colloc str) -> index oid
         self._axis_cache: dict[tuple[str, str, str], set[str]] = {}  # (cont, index, kw) -> values
 
+    @property
+    def stats(self):
+        """The engine's :class:`DaosStats` (shared telemetry sink)."""
+        return self._engine.stats
+
     # ------------------------------------------------------------------ util
     # _mu serialises resolution + cache fill across THIS process's threads
     # (the AsyncFDB writer pool drives archive_batch concurrently); racing

@@ -74,6 +74,11 @@ class DaosStore(Store):
         self._mu = threading.Lock()
         engine.create_pool(pool, exist_ok=True)
 
+    @property
+    def stats(self):
+        """The engine's :class:`DaosStats` (shared telemetry sink)."""
+        return self._engine.stats
+
     # ------------------------------------------------------------------ util
     def _ensure_container(self, name: str) -> None:
         if name in self._containers:

@@ -19,6 +19,7 @@ point at unpersisted bytes, on either backend.
 
 from __future__ import annotations
 
+import threading
 from typing import Iterable, Iterator, Mapping, Sequence
 
 from .catalogue import Catalogue, ListEntry
@@ -37,6 +38,9 @@ class FDB:
         self.catalogue = catalogue
         self.store = store
         self.schema: Schema = catalogue.schema
+        # serialises flush(): a racing flush must not return before entries
+        # it observed as archived are published (see flush below)
+        self._flush_mu = threading.Lock()
 
     # ------------------------------------------------------------------ API
     def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
@@ -64,8 +68,23 @@ class FDB:
         return self.schema.split(key if isinstance(key, Key) else Key(key))
 
     def flush(self) -> None:
-        self.store.flush()       # data durable first …
-        self.catalogue.flush()   # … then the index publishes it
+        # Two-phase when the catalogue supports it: TAKE the pending index
+        # entries first, flush the Store, then publish exactly what was
+        # taken.  With concurrent archivers, flushing the store first and
+        # taking after would publish entries whose bytes arrived in a write
+        # buffer AFTER the store flush ran — an index entry must never point
+        # at unpersisted data (§1.3).  The lock makes a racing flush() block
+        # until entries it observed are published, not return early empty-
+        # handed because another flusher took them.
+        take = getattr(self.catalogue, "take_pending", None)
+        with self._flush_mu:
+            if take is not None:
+                pending = take()
+                self.store.flush()       # data durable first …
+                self.catalogue.publish_pending(pending)  # … then publish
+            else:
+                self.store.flush()
+                self.catalogue.flush()
 
     def retrieve(self, key: Key | Mapping[str, str]) -> DataHandle | None:
         key = key if isinstance(key, Key) else Key(key)
@@ -116,6 +135,24 @@ class FDB:
     def list(self, request: Mapping[str, Iterable[str] | str] | None = None) -> Iterator[ListEntry]:
         return self.catalogue.list(request or {})
 
+    # ------------------------------------------------------------- telemetry
+    def io_stats(self) -> list:
+        """The distinct :class:`~repro.metrics.IOStats` instances behind this
+        FDB (store + catalogue; deduplicated — the DAOS pair shares the
+        engine's, a POSIX pair may share the process-global one)."""
+        seen: dict[int, object] = {}
+        for part in (self.store, self.catalogue):
+            s = getattr(part, "stats", None)
+            if s is not None:
+                seen.setdefault(id(s), s)
+        return list(seen.values())
+
+    def stats_snapshot(self) -> dict:
+        """One consistent, JSON-ready merge of this FDB's telemetry."""
+        from ..metrics.iostats import IOStats
+
+        return IOStats.merged(self.io_stats()).snapshot()
+
     def wipe(self, dataset_key: Key | Mapping[str, str]) -> None:
         dataset_key = dataset_key if isinstance(dataset_key, Key) else Key(dataset_key)
         self.catalogue.wipe(dataset_key.subset(self.schema.dataset_keys))
@@ -139,26 +176,39 @@ def make_fdb(
     root: str | None = None,
     engine=None,
     pool: str = "fdb",
+    stats=None,
+    contention=None,
     **kw,
 ) -> FDB:
     """Factory: ``backend in {'posix', 'daos'}``.
 
-    posix: ``root`` directory required.
-    daos: ``engine`` (DaosEngine or DaosClient) required.
+    posix: ``root`` directory required; ``stats``/``contention`` reach the
+    store + catalogue (default: process-global ``POSIX_STATS``, no model).
+    daos: ``engine`` (DaosEngine or DaosClient) required; ``contention``
+    is attached to the engine (its stats are the telemetry sink).
     """
     if backend == "posix":
         from .posix import PosixCatalogue, PosixStore
 
         if root is None:
             raise ValueError("posix backend requires root=")
-        return FDB(PosixCatalogue(root, schema), PosixStore(root, **kw))
+        return FDB(
+            PosixCatalogue(root, schema, stats=stats, contention=contention),
+            PosixStore(root, stats=stats, contention=contention, **kw),
+        )
     if backend == "daos":
         from .daos_backend import DaosCatalogue, DaosStore
 
+        if stats is not None:
+            raise ValueError(
+                "daos backend does not take stats= (engine.stats is the telemetry sink)"
+            )
         if engine is None:
             from .daos import DaosEngine
 
-            engine = DaosEngine()
+            engine = DaosEngine(contention=contention)
+        elif contention is not None:
+            engine.contention = contention
         return FDB(
             DaosCatalogue(engine, schema, pool=pool),
             DaosStore(engine, pool=pool, **kw),

@@ -34,7 +34,7 @@ from ..catalogue import Catalogue, ListEntry
 from ..keys import Key, key_union
 from ..schema import Schema
 from ..store import FieldLocation
-from .stats import POSIX_STATS
+from .stats import POSIX_STATS, PosixStats
 
 __all__ = ["PosixCatalogue"]
 
@@ -42,9 +42,18 @@ _TOC = "toc"
 
 
 class PosixCatalogue(Catalogue):
-    def __init__(self, root: str, schema: Schema):
+    def __init__(
+        self,
+        root: str,
+        schema: Schema,
+        *,
+        stats: PosixStats | None = None,
+        contention=None,
+    ):
         super().__init__(schema)
         self._root = root
+        self._stats = stats if stats is not None else POSIX_STATS
+        self._cm = contention
         os.makedirs(root, exist_ok=True)
         self._mu = threading.Lock()
         self._pending: dict[tuple[str, str], dict[str, FieldLocation]] = {}
@@ -54,6 +63,10 @@ class PosixCatalogue(Catalogue):
         self._toc_offset: dict[str, int] = {}
         self._toc_records: dict[str, list[tuple[str, str]]] = {}  # dataset -> [(colloc_s, segpath)]
         self._segments: dict[str, dict[str, bytes]] = {}  # segpath -> {el_s: raw location}
+
+    @property
+    def stats(self) -> PosixStats:
+        return self._stats
 
     # --------------------------------------------------------------- writing
     def archive(self, dataset_key: Key, collocation_key: Key, element_key: Key, location: FieldLocation) -> None:
@@ -69,8 +82,21 @@ class PosixCatalogue(Catalogue):
                 self._pending.setdefault(k, {})[element_key.stringify()] = location
 
     def flush(self) -> None:
+        self.publish_pending(self.take_pending())
+
+    # Two-phase flush (used by FDB.flush): the caller takes the pending
+    # entries BEFORE flushing the Store, then publishes them after — so a
+    # concurrently archiving thread can never get an entry published whose
+    # data bytes were still sitting in a write buffer when the Store flush
+    # ran (the §1.3 store-before-catalogue invariant, preserved under
+    # cross-thread flush stealing).
+
+    def take_pending(self) -> dict:
         with self._mu:
             pending, self._pending = self._pending, {}
+        return pending
+
+    def publish_pending(self, pending: dict) -> None:
         for (ds_s, co_s), entries in pending.items():
             ddir = os.path.join(self._root, ds_s)
             os.makedirs(ddir, exist_ok=True)
@@ -83,24 +109,35 @@ class PosixCatalogue(Catalogue):
             segname = f"{co_s}.{self._uid}.{seq}.index"
             segpath = os.path.join(ddir, segname)
             with open(segpath, "wb") as f:
-                POSIX_STATS.account("create_index_segment", mds=2)
+                lat = self._cm.mds(2) if self._cm else None
+                self._stats.account("create_index_segment", mds=2, seconds=lat)
                 payload = b"".join(
                     el.encode() + b"\t" + loc.encode() + b"\n" for el, loc in entries.items()
                 )
                 f.write(payload)
                 f.flush()
                 os.fsync(f.fileno())
-                POSIX_STATS.account("write_index_segment", nbytes_w=len(payload), locks=1)
+                lat = self._cm.write(segpath, len(payload)) if self._cm else None
+                self._stats.account(
+                    "write_index_segment", nbytes_w=len(payload), locks=1, seconds=lat, shard=segpath
+                )
             # publish: one-line record appended atomically via O_APPEND
+            tocpath = os.path.join(ddir, _TOC)
             record = f"idx {co_s} {segname}\n".encode()
-            fd = os.open(os.path.join(ddir, _TOC), os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+            fd = os.open(tocpath, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
             try:
                 os.write(fd, record)
                 os.fsync(fd)
             finally:
                 os.close(fd)
             # the TOC append is the write-lock exchange every reader contends on
-            POSIX_STATS.account("toc_append", nbytes_w=len(record), locks=1, mds=1)
+            if self._cm:
+                lat = self._cm.write(tocpath, len(record)) + self._cm.mds(1)
+            else:
+                lat = None
+            self._stats.account(
+                "toc_append", nbytes_w=len(record), locks=1, mds=1, seconds=lat, shard=tocpath
+            )
 
     # --------------------------------------------------------------- reading
     # reader caches are shared across this process's threads (AsyncFDB fans
@@ -130,7 +167,13 @@ class PosixCatalogue(Catalogue):
                         records.append((parts[1], parts[2]))
                 self._toc_offset[ds_s] = off + consumed
                 # tailing a TOC being appended: conflicting read lock + stat
-                POSIX_STATS.account("toc_read", nbytes_r=consumed, locks=1, mds=1)
+                if self._cm:
+                    lat = self._cm.read(tocpath, consumed) + self._cm.mds(1)
+                else:
+                    lat = None
+                self._stats.account(
+                    "toc_read", nbytes_r=consumed, locks=1, mds=1, seconds=lat, shard=tocpath
+                )
             return records
 
     def _load_segment(self, ds_s: str, segname: str) -> dict[str, bytes]:
@@ -140,7 +183,13 @@ class PosixCatalogue(Catalogue):
             if seg is None:
                 with open(segpath, "rb") as f:
                     raw = f.read()  # single read per segment file
-                POSIX_STATS.account("read_index_segment", nbytes_r=len(raw), locks=1, mds=1)
+                if self._cm:
+                    lat = self._cm.read(segpath, len(raw)) + self._cm.mds(1)
+                else:
+                    lat = None
+                self._stats.account(
+                    "read_index_segment", nbytes_r=len(raw), locks=1, mds=1, seconds=lat, shard=segpath
+                )
                 seg = {}
                 for line in raw.splitlines():
                     el, _, loc = line.partition(b"\t")
@@ -190,7 +239,8 @@ class PosixCatalogue(Catalogue):
         ds_req, co_req, el_req = self.schema.request_levels(request)
         try:
             datasets = sorted(os.listdir(self._root))
-            POSIX_STATS.account("readdir", mds=1)
+            lat = self._cm.mds(1) if self._cm else None
+            self._stats.account("readdir", mds=1, seconds=lat)
         except FileNotFoundError:
             return
         for ds_s in datasets:
@@ -229,4 +279,5 @@ class PosixCatalogue(Catalogue):
         with self._mu:
             self._toc_offset.pop(ds_s, None)
             self._toc_records.pop(ds_s, None)
-        POSIX_STATS.account("wipe", mds=1)
+        lat = self._cm.mds(1) if self._cm else None
+        self._stats.account("wipe", mds=1, seconds=lat)

@@ -6,55 +6,68 @@ MDS round-trips (paper §1: "distributed locking mechanisms need to be put in
 place ... causing large lock communication overheads on the client nodes").
 A local filesystem has none of those costs, so the backend *counts* the
 operations that would incur them; the benchmark cost model
-(:mod:`repro.core.costmodel`) converts counts into simulated time at scale.
+(:mod:`repro.core.costmodel`) converts counts into simulated time at scale,
+and the contention model (:mod:`repro.metrics.contention`) injects them as
+per-op latencies.
+
+:class:`PosixStats` is the :class:`~repro.metrics.IOStats` protocol plus the
+two Lustre-specific counters (extent locks, MDS round-trips).  Snapshot and
+reset are atomic with respect to concurrent accounting — all state lives
+under the one IOStats lock.
 """
 
 from __future__ import annotations
 
-import threading
-from collections import Counter
-from dataclasses import dataclass, field
+from ...metrics.iostats import IOStats
 
 __all__ = ["PosixStats", "POSIX_STATS"]
 
 
-@dataclass
-class PosixStats:
-    ops: Counter = field(default_factory=Counter)
-    bytes_written: int = 0
-    bytes_read: int = 0
-    # extent-lock acquisitions that a Lustre client would have needed
-    lock_acquisitions: int = 0
-    # metadata-server round-trips (open/create/stat/readdir)
-    mds_ops: int = 0
-    _mu: threading.Lock = field(default_factory=threading.Lock, repr=False)
+class PosixStats(IOStats):
+    """The Lustre counters live in the generic ``counters`` map, so they
+    survive :meth:`IOStats.merge`/``merged`` (e.g. in ``stats_snapshot()``
+    across router lanes); the properties and top-level snapshot keys are the
+    POSIX-flavoured view of them."""
 
-    def account(self, op: str, *, nbytes_w: int = 0, nbytes_r: int = 0, locks: int = 0, mds: int = 0) -> None:
+    def __init__(self, name: str = "posix"):
+        super().__init__(name)
+
+    def account(
+        self,
+        op: str,
+        *,
+        nbytes_w: int = 0,
+        nbytes_r: int = 0,
+        locks: int = 0,
+        mds: int = 0,
+        seconds: float | None = None,
+        shard: str | None = None,
+    ) -> None:
         with self._mu:
-            self.ops[op] += 1
-            self.bytes_written += nbytes_w
-            self.bytes_read += nbytes_r
-            self.lock_acquisitions += locks
-            self.mds_ops += mds
+            self._record_locked(op, seconds, nbytes_w, nbytes_r, shard, 1)
+            # extent locks a Lustre client would need + MDS round-trips
+            if locks:
+                self.counters["lock_acquisitions"] += locks
+            if mds:
+                self.counters["mds_ops"] += mds
+
+    @property
+    def lock_acquisitions(self) -> int:
+        return self.counters["lock_acquisitions"]
+
+    @property
+    def mds_ops(self) -> int:
+        return self.counters["mds_ops"]
 
     def snapshot(self) -> dict:
-        with self._mu:
-            return {
-                "ops": dict(self.ops),
-                "bytes_written": self.bytes_written,
-                "bytes_read": self.bytes_read,
-                "lock_acquisitions": self.lock_acquisitions,
-                "mds_ops": self.mds_ops,
-            }
-
-    def reset(self) -> None:
-        with self._mu:
-            self.ops.clear()
-            self.bytes_written = 0
-            self.bytes_read = 0
-            self.lock_acquisitions = 0
-            self.mds_ops = 0
+        with self._mu:  # RLock: the nested snapshot stays one atomic cut
+            snap = super().snapshot()
+            snap["lock_acquisitions"] = self.counters["lock_acquisitions"]
+            snap["mds_ops"] = self.counters["mds_ops"]
+            return snap
 
 
-#: process-global stats instance (one "client" per process)
+#: process-global stats instance (one "client" per process) — the default
+#: sink; pass ``stats=PosixStats(...)`` to the backends for per-lane
+#: telemetry instead
 POSIX_STATS = PosixStats()

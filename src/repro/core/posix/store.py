@@ -11,19 +11,26 @@ real Lustre (cheap, uncontended); reads of *another process's* file take a
 read lock that may conflict with the writer's cached write locks — that is
 where the paper's contention collapse comes from, and the reader path here
 counts those conflicting-lock acquisitions for the cost model.
+
+Telemetry + contention: every op is accounted into a :class:`PosixStats`
+(the process-global ``POSIX_STATS`` unless a per-instance one is passed),
+and when a :class:`~repro.metrics.LustreContention` model is attached the
+op's scale-faithful service time is injected (per-file extent-lock queue,
+OST stream, MDS) and recorded in the latency histograms.
 """
 
 from __future__ import annotations
 
 import os
 import threading
+import time
 import uuid
 from typing import Sequence
 
 from ..datahandle import DataHandle
 from ..keys import Key
 from ..store import FieldLocation, Store
-from .stats import POSIX_STATS
+from .stats import POSIX_STATS, PosixStats
 
 __all__ = ["PosixStore"]
 
@@ -31,10 +38,19 @@ __all__ = ["PosixStore"]
 class PosixStore(Store):
     scheme = "posix"
 
-    def __init__(self, root: str, *, buffer_bytes: int = 4 << 20):
+    def __init__(
+        self,
+        root: str,
+        *,
+        buffer_bytes: int = 4 << 20,
+        stats: PosixStats | None = None,
+        contention=None,
+    ):
         self._root = root
         os.makedirs(root, exist_ok=True)
         self._buffer_bytes = buffer_bytes
+        self._stats = stats if stats is not None else POSIX_STATS
+        self._cm = contention
         self._mu = threading.RLock()  # archive() re-enters via _data_file()
         # unique per handle: "process" identity = (pid, instance) so that
         # multiple writer handles in one OS process never collide
@@ -42,6 +58,10 @@ class PosixStore(Store):
         # dataset str -> (fd path, file object, current offset)
         self._files: dict[str, tuple[str, object, int]] = {}
         self._seq = 0
+
+    @property
+    def stats(self) -> PosixStats:
+        return self._stats
 
     def _data_file(self, dataset_s: str):
         ent = self._files.get(dataset_s)
@@ -54,18 +74,22 @@ class PosixStore(Store):
                     self._seq += 1
                     path = os.path.join(ddir, f"{self._uid}.{self._seq}.data")
                     f = open(path, "ab", buffering=self._buffer_bytes)
-                    POSIX_STATS.account("open_data_file", mds=2)  # create + open
+                    lat = self._cm.mds(2) if self._cm else None
+                    self._stats.account("open_data_file", mds=2, seconds=lat)  # create + open
                     ent = (path, f, 0)
                     self._files[dataset_s] = ent
         return ent
 
     def archive(self, data: bytes, dataset_key: Key, collocation_key: Key) -> FieldLocation:
         dataset_s = dataset_key.stringify()
+        t0 = time.perf_counter()
         with self._mu:
             path, f, off = self._data_file(dataset_s)
             f.write(data)  # buffered append to the private stream
             self._files[dataset_s] = (path, f, off + len(data))
-        POSIX_STATS.account("write", nbytes_w=len(data), locks=1)  # own-file extent lock (uncontended)
+        # own-file extent lock (uncontended while the stream is private)
+        lat = self._cm.write(path, len(data)) if self._cm else time.perf_counter() - t0
+        self._stats.account("write", nbytes_w=len(data), locks=1, seconds=lat, shard=path)
         return FieldLocation(self.scheme, path, off, len(data))
 
     def archive_batch(self, items: Sequence[tuple[bytes, Key, Key]]) -> list[FieldLocation]:
@@ -79,6 +103,7 @@ class PosixStore(Store):
         out: list[FieldLocation | None] = [None] * len(items)
         for dataset_s, idxs in groups.items():
             payloads = [bytes(items[i][0]) for i in idxs]
+            t0 = time.perf_counter()
             with self._mu:
                 path, f, off = self._data_file(dataset_s)
                 f.write(b"".join(payloads))  # one vectored (writev-style) append
@@ -88,7 +113,12 @@ class PosixStore(Store):
                     run += len(data)
                 self._files[dataset_s] = (path, f, run)
             # one extent lock for the whole contiguous run of this batch
-            POSIX_STATS.account("write_batch", nbytes_w=run - off, locks=1)
+            lat = (
+                self._cm.write(path, run - off, nfields=len(idxs))
+                if self._cm
+                else time.perf_counter() - t0
+            )
+            self._stats.account("write_batch", nbytes_w=run - off, locks=1, seconds=lat, shard=path)
         return out  # type: ignore[return-value]
 
     def flush(self) -> None:
@@ -96,12 +126,13 @@ class PosixStore(Store):
             for path, f, _ in self._files.values():
                 f.flush()
                 os.fsync(f.fileno())
-                POSIX_STATS.account("fsync")
+                lat = self._cm.sync() if self._cm else None
+                self._stats.account("fsync", seconds=lat, shard=path)
 
     def retrieve(self, location: FieldLocation) -> DataHandle:
         if location.scheme != self.scheme:
             raise ValueError(f"not a posix location: {location}")
-        return _PosixFileHandle(location)
+        return _PosixFileHandle(location, stats=self._stats, contention=self._cm)
 
     def close(self) -> None:
         self.flush()
@@ -112,10 +143,12 @@ class PosixStore(Store):
 
 
 class _PosixFileHandle(DataHandle):
-    def __init__(self, location: FieldLocation):
+    def __init__(self, location: FieldLocation, *, stats: PosixStats | None = None, contention=None):
         self._path = location.uri
         self._offset = location.offset
         self._length = location.length
+        self._stats = stats if stats is not None else POSIX_STATS
+        self._cm = contention
 
     def read(self) -> bytes:
         return self.read_range(0, self._length)
@@ -123,12 +156,15 @@ class _PosixFileHandle(DataHandle):
     def read_range(self, offset: int, length: int) -> bytes:
         if offset + length > self._length:
             raise ValueError("read_range beyond field extent")
+        t0 = time.perf_counter()
         with open(self._path, "rb") as f:
-            POSIX_STATS.account("open_data_file_read", mds=1)
+            lat = self._cm.mds(1) if self._cm else None
+            self._stats.account("open_data_file_read", mds=1, seconds=lat)
             f.seek(self._offset + offset)
             data = f.read(length)
         # reading another process's streamed file: conflicting extent lock
-        POSIX_STATS.account("read", nbytes_r=len(data), locks=1)
+        lat = self._cm.read(self._path, len(data)) if self._cm else time.perf_counter() - t0
+        self._stats.account("read", nbytes_r=len(data), locks=1, seconds=lat, shard=self._path)
         return data
 
     @property

@@ -108,6 +108,31 @@ class FDBRouter:
     def wipe(self, dataset_key: Key | Mapping[str, str]) -> None:
         self._lane(dataset_key).wipe(dataset_key)
 
+    # ------------------------------------------------------------- telemetry
+    def io_stats(self) -> list:
+        """Distinct stats instances across all lanes (lanes built by
+        :func:`make_router` carry per-lane sinks; shared sinks — e.g. one
+        DAOS engine behind every lane — are deduplicated)."""
+        seen: dict[int, object] = {}
+        for lane in self.lanes:
+            getter = getattr(lane, "io_stats", None)
+            if getter is None:
+                continue
+            for s in getter():
+                seen.setdefault(id(s), s)
+        return list(seen.values())
+
+    def stats_snapshot(self) -> dict:
+        """Merged telemetry plus the per-lane breakdown."""
+        from ..metrics.iostats import IOStats
+
+        snap = IOStats.merged(self.io_stats()).snapshot()
+        snap["lanes"] = [
+            lane.stats_snapshot() if hasattr(lane, "stats_snapshot") else {}
+            for lane in self.lanes
+        ]
+        return snap
+
     def close(self) -> None:
         # a failing lane must not leave the healthy ones unflushed: close
         # every lane, then re-raise the first failure
@@ -135,18 +160,26 @@ def make_router(
     root: str | None = None,
     engine=None,
     pool: str = "fdb",
+    contention=None,
     **kw,
 ) -> FDBRouter:
     """Build an N-lane router of homogeneous backends.
 
-    posix: lane *i* lives under ``root/lane{i}`` (independent TOCs/streams).
+    posix: lane *i* lives under ``root/lane{i}`` (independent TOCs/streams)
+    and gets its OWN :class:`PosixStats` sink, so ``stats_snapshot()`` can
+    break traffic down per lane.
     daos: lane *i* uses pool ``{pool}-lane{i}`` on a shared engine
-    (independent root containers and index KVs).
+    (independent root containers and index KVs; telemetry is per-engine).
+    A ``contention`` model is shared by every lane — the lanes contend for
+    the same emulated servers.
     """
     from .fdb import make_fdb
 
     if n_lanes < 1:
         raise ValueError("need at least one lane")
+    shared_stats = kw.pop("stats", None)  # explicit sink: shared by all lanes
+    if shared_stats is not None and backend == "daos":
+        raise ValueError("daos router does not take stats= (engine.stats is the telemetry sink)")
     lanes = []
     for i in range(n_lanes):
         if backend == "posix":
@@ -154,12 +187,20 @@ def make_router(
                 raise ValueError("posix router requires root=")
             import os
 
-            lanes.append(make_fdb("posix", schema=schema, root=os.path.join(root, f"lane{i}"), **kw))
+            from .posix import PosixStats
+
+            lanes.append(
+                make_fdb(
+                    "posix", schema=schema, root=os.path.join(root, f"lane{i}"),
+                    stats=shared_stats or PosixStats(name=f"posix-lane{i}"),
+                    contention=contention, **kw,
+                )
+            )
         elif backend == "daos":
             if engine is None:
                 from .daos import DaosEngine
 
-                engine = DaosEngine()
+                engine = DaosEngine(contention=contention)
             lanes.append(make_fdb("daos", schema=schema, engine=engine, pool=f"{pool}-lane{i}", **kw))
         else:
             raise ValueError(f"unknown router backend {backend!r}")

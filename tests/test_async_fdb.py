@@ -210,6 +210,89 @@ class TestAsyncFDB:
             assert got[k] == v
 
 
+class _GatedStore:
+    """Store wrapper: shard archives (payloads tagged ``SHARD``) block on a
+    gate — an injected slow store — while commit-sentinel archives pass.
+    Lets a test freeze the write path mid-checkpoint and observe ordering."""
+
+    def __init__(self, inner, gate: threading.Event):
+        self._inner = inner
+        self._gate = gate
+        self.scheme = inner.scheme
+
+    def archive(self, data, dataset_key, collocation_key):
+        if bytes(data).startswith(b"SHARD"):
+            assert self._gate.wait(timeout=30), "gate never opened"
+        return self._inner.archive(data, dataset_key, collocation_key)
+
+    def archive_batch(self, items):
+        if any(bytes(d).startswith(b"SHARD") for d, _, _ in items):
+            assert self._gate.wait(timeout=30), "gate never opened"
+        return self._inner.archive_batch(items)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+class TestDrainBarrierOrdering:
+    def test_commit_sentinel_never_visible_before_shards_land(self):
+        """The checkpoint pattern (manager.py): shards via archive_batch,
+        drain(), THEN the commit sentinel.  With an injected slow store the
+        drain barrier must hold the sentinel back — on the immediate-
+        visibility DAOS backend the sentinel may never be listable while any
+        shard write is still in flight."""
+        from repro.core import CHECKPOINT_SCHEMA
+        from repro.core.fdb import FDB
+
+        eng = DaosEngine()
+        inner = make_fdb("daos", schema=CHECKPOINT_SCHEMA, engine=eng)
+        gate = threading.Event()
+        fdb = FDB(inner.catalogue, _GatedStore(inner.store, gate))
+
+        def key(param: str) -> Key:
+            return Key(run="r1", kind="ckpt", step="0", writer="w0", param=param, shard="0")
+
+        shards = [(key(f"p{i}"), b"SHARD" + bytes([i]) * 64) for i in range(6)]
+        sentinel = (key("MANIFEST"), b"COMMIT" + b"m" * 16)
+        drained = threading.Event()
+
+        afdb = AsyncFDB(fdb, writers=3, batch_size=2)
+        errors: list[Exception] = []
+
+        def writer():
+            try:
+                afdb.archive_batch(shards)
+                afdb.drain()  # barrier: every shard landed in the backend
+                drained.set()
+                afdb.archive(*sentinel)
+                afdb.flush()
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        t = threading.Thread(target=writer)
+        t.start()
+        try:
+            # while the store is frozen, the drain barrier must not have
+            # been crossed and the sentinel must not be listable
+            for _ in range(20):
+                assert not drained.is_set()
+                listed = [e.key["param"] for e in fdb.list({"run": "r1", "kind": "ckpt"})]
+                assert "MANIFEST" not in listed, "sentinel visible before shards landed"
+                threading.Event().wait(0.01)
+        finally:
+            gate.set()
+            t.join(timeout=30)
+        assert not errors, errors[0]
+        assert drained.is_set()
+        # after the barrier + flush: sentinel AND every shard visible/correct
+        listed = {e.key["param"] for e in fdb.list({"run": "r1", "kind": "ckpt"})}
+        assert "MANIFEST" in listed
+        for k, v in shards:
+            assert afdb.read(k) == v
+        assert afdb.read(sentinel[0]) == sentinel[1]
+        afdb.close()
+
+
 class TestRouter:
     DATES = ("20230101", "20230102", "20230103", "20230104")
 

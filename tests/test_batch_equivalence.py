@@ -1,0 +1,113 @@
+"""Property tests: the batched paths are observationally equivalent to the
+sequential ones — ``archive_batch``/``retrieve_batch``/``retrieve_many``
+give exactly the results of one-at-a-time ``archive``/``retrieve`` for
+random key sets (duplicates included: last write wins), on both backends."""
+
+import contextlib
+import tempfile
+
+from proptest import Rand, forall
+
+from repro.core import Key, NWP_SCHEMA_DAOS, make_fdb
+from repro.core.daos import DaosEngine
+from repro.core.posix import PosixStats
+
+BACKENDS = ("daos", "posix")
+DATES = ("20240601", "20240602")
+NUMBERS = ("0", "1", "2")
+LEVELS = ("1", "5")
+STEPS = ("0", "6", "12")
+PARAMS = ("129", "130")
+
+
+def _random_key(r: Rand) -> Key:
+    return Key(
+        {"class": "rd", "stream": "oper", "expver": "0001", "date": r.choice(DATES),
+         "time": "0000", "type": "ef", "levtype": "ml", "number": r.choice(NUMBERS),
+         "levelist": r.choice(LEVELS), "step": r.choice(STEPS), "param": r.choice(PARAMS)}
+    )
+
+
+def _random_items(r: Rand) -> list[tuple[Key, bytes]]:
+    # duplicates on purpose: replacement semantics must match too
+    return [(_random_key(r), r.bytes(max_len=512)) for _ in range(r.int(1, 16))]
+
+
+@contextlib.contextmanager
+def _fdb(backend: str):
+    if backend == "daos":
+        fdb = make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=DaosEngine())
+        try:
+            yield fdb
+        finally:
+            fdb.close()
+        return
+    with tempfile.TemporaryDirectory() as td:
+        fdb = make_fdb("posix", schema=NWP_SCHEMA_DAOS, root=td, stats=PosixStats())
+        try:
+            yield fdb
+        finally:
+            fdb.close()
+
+
+def _state(fdb, probe_keys) -> tuple:
+    reads = tuple(fdb.read(k) for k in probe_keys)
+    listing = tuple(sorted(e.key.stringify() for e in fdb.list()))
+    return reads, listing
+
+
+class TestBatchEquivalence:
+    @forall(n_cases=12)
+    def test_archive_batch_equals_sequential(self, r: Rand):
+        items = _random_items(r)
+        probes = [k for k, _ in items] + [_random_key(r) for _ in range(4)]  # + maybe-absent
+        for backend in BACKENDS:
+            with _fdb(backend) as seq, _fdb(backend) as bat:
+                for k, v in items:
+                    seq.archive(k, v)
+                seq.flush()
+                bat.archive_batch(items)
+                bat.flush()
+                assert _state(seq, probes) == _state(bat, probes), backend
+
+    @forall(n_cases=12)
+    def test_retrieve_batch_equals_sequential_retrieves(self, r: Rand):
+        items = _random_items(r)
+        probes = [k for k, _ in items] + [_random_key(r) for _ in range(4)]
+        for backend in BACKENDS:
+            with _fdb(backend) as fdb:
+                fdb.archive_batch(items)
+                fdb.flush()
+                batched = fdb.retrieve_batch(probes)
+                for k, h in zip(probes, batched):
+                    single = fdb.retrieve(k)
+                    if h is None:
+                        assert single is None, backend
+                    else:
+                        assert single is not None and h.read() == single.read(), backend
+
+    @forall(n_cases=10)
+    def test_retrieve_many_equals_singles(self, r: Rand):
+        items = _random_items(r)
+        request = {
+            "class": "rd", "stream": "oper", "expver": "0001", "time": "0000",
+            "type": "ef", "levtype": "ml",
+            "date": [r.choice(DATES) for _ in range(r.int(1, 2))],
+            "number": [r.choice(NUMBERS) for _ in range(r.int(1, 3))],
+            "levelist": list(LEVELS)[: r.int(1, 2)],
+            "step": [r.choice(STEPS) for _ in range(r.int(1, 2))],
+            "param": list(PARAMS)[: r.int(1, 2)],
+        }
+        for backend in BACKENDS:
+            with _fdb(backend) as fdb:
+                fdb.archive_batch(items)
+                fdb.flush()
+                got = fdb.retrieve_many(request)
+                keys = fdb.schema.expand(request)
+                assert set(got) == set(keys), backend  # full cartesian product
+                for k in keys:
+                    single = fdb.read(k)
+                    if got[k] is None:
+                        assert single is None, backend
+                    else:
+                        assert got[k].read() == single, backend

@@ -1,0 +1,153 @@
+"""Metrics package: histograms, the unified IOStats protocol, and the
+snapshot/reset atomicity fix (snapshots taken during concurrent accounting
+must be internally consistent cuts)."""
+
+import threading
+
+import pytest
+
+from repro.core.daos import DaosEngine
+from repro.core.daos.objects import ObjectId
+from repro.core.posix.stats import PosixStats
+from repro.metrics import IOStats, LatencyHistogram
+
+
+class TestLatencyHistogram:
+    def test_percentiles_bound_the_samples(self):
+        h = LatencyHistogram()
+        samples = [1e-6 * (i + 1) for i in range(1000)]  # 1us .. 1ms
+        for s in samples:
+            h.record(s)
+        assert h.n == 1000
+        p50, p95, p99 = h.percentile(0.5), h.percentile(0.95), h.percentile(0.99)
+        assert p50 <= p95 <= p99 <= h.max_s == pytest.approx(1e-3)
+        # fixed log buckets: quantile error bounded by the bucket ratio
+        assert 0.5e-3 * 0.7 <= p50 <= 0.5e-3 * 1.4
+        assert 0.99e-3 * 0.7 <= p99 <= 1e-3
+
+    def test_merge_equals_combined_recording(self):
+        a, b, c = LatencyHistogram(), LatencyHistogram(), LatencyHistogram()
+        for i in range(100):
+            a.record(1e-5 * (i + 1))
+            c.record(1e-5 * (i + 1))
+        for i in range(50):
+            b.record(1e-3 * (i + 1))
+            c.record(1e-3 * (i + 1))
+        a.merge(b)
+        assert a.counts == c.counts
+        assert a.n == c.n == 150
+        assert a.percentile(0.9) == c.percentile(0.9)
+        assert a.snapshot()["max_s"] == c.snapshot()["max_s"]
+
+    def test_empty_and_extremes(self):
+        h = LatencyHistogram()
+        assert h.percentile(0.99) == 0.0
+        assert h.snapshot()["count"] == 0
+        h.record(0.0)        # underflow bucket
+        h.record(1e9)        # overflow bucket (clamped)
+        assert h.n == 2
+        assert h.percentile(1.0) == h.max_s == 1e9
+
+
+class TestIOStats:
+    def test_record_and_snapshot_shape(self):
+        st = IOStats("x")
+        st.record("write", seconds=1e-4, nbytes_w=100, shard="seg0")
+        st.record("read", seconds=2e-4, nbytes_r=50, shard="seg1")
+        snap = st.snapshot()
+        assert snap["ops"] == {"write": 1, "read": 1}
+        assert snap["bytes_written"] == 100 and snap["bytes_read"] == 50
+        assert snap["op_bytes_w"]["write"] == 100
+        assert snap["shard_ops"] == {"seg0": 1, "seg1": 1}
+        assert snap["latency"]["write"]["count"] == 1
+        assert snap["latency"]["write"]["p99_s"] >= 1e-4 * 0.7
+        st.to_json()  # JSON-serialisable
+
+    def test_merged(self):
+        a, b = IOStats("a"), IOStats("b")
+        a.record("op", seconds=1e-5, nbytes_w=1)
+        b.record("op", seconds=1e-5, nbytes_w=2)
+        m = IOStats.merged([a, b])
+        snap = m.snapshot()
+        assert snap["ops"]["op"] == 2
+        assert snap["bytes_written"] == 3
+        assert snap["latency"]["op"]["count"] == 2
+
+    def _hammer_snapshots(self, stats, account_one, ops_of, bytes_of):
+        """Concurrent accounting vs snapshot/reset: every cut must be
+        consistent (ops == bytes invariants) and nothing may be lost."""
+        N_THREADS, N_OPS = 4, 2000
+        stop = threading.Event()
+        collected = []
+        errors = []
+
+        def writer():
+            for _ in range(N_OPS):
+                account_one()
+
+        def sampler():
+            try:
+                while not stop.is_set():
+                    # drain: snapshot+reset as ONE atomic cut via the lock
+                    with stats.lock:
+                        snap = stats.snapshot()
+                        stats.reset()
+                    # consistency of the cut: each account adds 1 op AND 1
+                    # byte atomically, so any snapshot must see them equal
+                    assert ops_of(snap) == bytes_of(snap), snap
+                    collected.append(snap)
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer) for _ in range(N_THREADS)]
+        sam = threading.Thread(target=sampler)
+        sam.start()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stop.set()
+        sam.join()
+        if errors:
+            raise errors[0]
+        final = stats.snapshot()
+        total_ops = sum(ops_of(s) for s in collected) + ops_of(final)
+        total_bytes = sum(bytes_of(s) for s in collected) + bytes_of(final)
+        assert total_ops == N_THREADS * N_OPS  # reset loses nothing
+        assert total_bytes == N_THREADS * N_OPS
+
+    def test_snapshot_reset_atomic_under_concurrent_account_iostats(self):
+        st = IOStats()
+        self._hammer_snapshots(
+            st,
+            lambda: st.record("w", nbytes_w=1),
+            lambda s: s["ops"].get("w", 0),
+            lambda s: s["bytes_written"],
+        )
+
+    def test_snapshot_reset_atomic_posix_stats(self):
+        st = PosixStats()
+        self._hammer_snapshots(
+            st,
+            lambda: st.account("w", nbytes_w=1, locks=1),
+            lambda s: s["ops"].get("w", 0),
+            lambda s: s["lock_acquisitions"],
+        )
+
+    def test_snapshot_reset_atomic_daos_stats_via_engine(self):
+        eng = DaosEngine()
+        eng.create_pool("p")
+        eng.cont_create("p", "c")
+        oid = ObjectId(0, 7)
+        counter = [0]
+
+        def put():
+            counter[0] += 1
+            eng.kv_put("p", "c", oid, f"k{threading.get_ident()}", b"x")
+
+        self._hammer_snapshots(
+            eng.stats,
+            put,
+            lambda s: s["ops"].get("daos_kv_put", 0),
+            lambda s: s["bytes_written"],
+        )
