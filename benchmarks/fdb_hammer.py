@@ -43,10 +43,10 @@ import numpy as np
 
 from repro.core import (
     AsyncFDB,
-    FDB,
     Key,
     NWP_SCHEMA_DAOS,
     NWP_SCHEMA_POSIX,
+    Request,
     make_fdb,
     make_router,
 )
@@ -57,6 +57,7 @@ from repro.metrics import make_contention
 __all__ = [
     "HammerSpec",
     "run_hammer",
+    "run_request",
     "make_backend",
     "run_hammer_contended",
     "scaling_sweep",
@@ -165,7 +166,7 @@ def run_hammer(fdb, spec: HammerSpec, mode: str) -> dict:
                         base = dict(_field_key(member, step, 0, 0, spec.n_datasets))
                         base["param"] = [str(130 + p) for p in range(spec.n_params)]
                         base["levelist"] = [str(lv) for lv in range(spec.n_levels)]
-                        datas = handle.read_many(base)
+                        datas = handle.retrieve_many(base).read_all()
                         assert len(datas) == spec.n_params * spec.n_levels
                         assert all(d is not None and len(d) == spec.field_size for d in datas.values())
             elif mode == "list":
@@ -225,6 +226,30 @@ def sweep(spec: HammerSpec, backends=("daos", "posix"), lanes_sweep=(1, 2)) -> l
                              "read_GiBps": r["bandwidth_GiBps"],
                              "us_per_field_w": w["us_per_field"]})
     return rows
+
+
+# ---------------------------------------------------------------------------
+# MARS request mode (--request): exercise the request language end to end
+# ---------------------------------------------------------------------------
+
+def run_request(fdb, request_text: str) -> dict:
+    """Parse a MARS-style request (ranges, wildcards, partial requests) and
+    retrieve it through the shared :class:`FDBClient` surface; full requests
+    expand client-side, partial ones resolve via the level-pruned
+    catalogue."""
+    req = Request.parse(request_text)
+    t0 = time.perf_counter()
+    fieldset = fdb.retrieve_many(req)
+    datas = fieldset.read_all()
+    dt = time.perf_counter() - t0
+    present = [v for v in datas.values() if v is not None]
+    return {
+        "request": req.format(),
+        "matched_fields": len(fieldset),
+        "present_fields": len(present),
+        "bytes": sum(len(v) for v in present),
+        "seconds": dt,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -422,10 +447,36 @@ def main() -> None:
     ap.add_argument("--io", choices=IO_MODES, default="sync")
     ap.add_argument("--out", default="BENCH_contention.json",
                     help="output JSON for --scaling")
+    ap.add_argument("--request", default=None, metavar="MARS",
+                    help="populate the backends, then retrieve this MARS-style "
+                         'request through the shared client surface (e.g. '
+                         '"step=0/to/4/by/2,param=*" — ranges, wildcards and '
+                         "partial requests all work)")
     args = ap.parse_args()
 
     spec = HammerSpec(n_procs=args.procs, n_steps=args.steps, n_params=args.params,
                       n_levels=args.levels, field_size=args.field_size, io=args.io)
+
+    if args.request:
+        import tempfile
+
+        lanes = args.lanes[0]  # request mode is a single cell, not a sweep
+        spec = replace(spec, n_datasets=max(spec.n_datasets, lanes))
+        print(f"fdb-hammer request mode: {args.request!r} over "
+              f"{spec.n_procs} procs x {spec.fields_per_proc} fields "
+              f"(io={spec.io}, lanes={lanes})\n")
+        print(f"{'backend':8s} {'matched':>8s} {'present':>8s} {'MiB':>8s} {'ms':>8s}")
+        for backend in args.backends:
+            with tempfile.TemporaryDirectory() as td:
+                fdb = make_backend(backend, root=td, engine=None, lanes=lanes)
+                try:
+                    run_hammer(fdb, spec, "archive")
+                    res = run_request(fdb, args.request)
+                finally:
+                    fdb.close()
+            print(f"{backend:8s} {res['matched_fields']:8d} {res['present_fields']:8d} "
+                  f"{res['bytes'] / (1 << 20):8.2f} {1e3 * res['seconds']:8.1f}")
+        return
 
     if args.scaling:
         procs_list = _pow2_upto(args.procs)

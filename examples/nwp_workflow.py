@@ -21,7 +21,7 @@ import time
 
 import numpy as np
 
-from repro.core import AsyncFDB, Key, NWP_SCHEMA_DAOS, NWP_SCHEMA_POSIX, make_fdb
+from repro.core import AsyncFDB, Key, NWP_SCHEMA_DAOS, NWP_SCHEMA_POSIX, Request, make_fdb
 from repro.fields import synthetic_field
 from repro.core.daos import DaosEngine
 from repro.core.posix.stats import POSIX_STATS
@@ -84,13 +84,16 @@ def run_workflow(make, io: str = "sync") -> dict:
         try:
             for step in range(N_STEPS):
                 step_done[step].wait(timeout=60)
-                step_keys = [key(m, step, p) for m in range(N_MEMBERS) for p in PARAMS]
                 if io == "async":
-                    # the whole transposed slice as one batched read
-                    datas = fdb.read_batch(step_keys)
-                    assert all(d is not None for d in datas), f"missing field in step {step}"
+                    # the whole transposed slice as ONE partial MARS request:
+                    # members and params stay unspecified, the catalogue
+                    # resolves them and the read comes back batched
+                    fieldset = fdb.retrieve_many(Request.parse(f"step={step},param=*"))
+                    datas = fieldset.read_all()
+                    assert len(datas) == N_MEMBERS * len(PARAMS), f"short slice at step {step}"
+                    assert all(d is not None for d in datas.values()), f"missing field in step {step}"
                 else:
-                    for k in step_keys:
+                    for k in [key(m, step, p) for m in range(N_MEMBERS) for p in PARAMS]:
                         assert fdb.read(k) is not None, f"missing {dict(k)}"
         except Exception as e:  # noqa: BLE001
             errors.append(e)

@@ -11,7 +11,7 @@ import tempfile
 
 import numpy as np
 
-from repro.core import Key, NWP_SCHEMA_DAOS, NWP_SCHEMA_POSIX, make_fdb
+from repro.core import Key, NWP_SCHEMA_DAOS, NWP_SCHEMA_POSIX, Request, make_fdb
 from repro.core.daos import DaosEngine
 from repro.fields import synthetic_field
 from repro.kernels.grib_pack import pack_to_bytes, unpack_from_bytes
@@ -54,9 +54,22 @@ def main() -> None:
             for param in ("2t", "10u"):
                 writer.archive(field_key(member, step, param), payload)
     writer.flush()
-    step0 = list(reader.list({"step": "0"}))
+    step0 = list(reader.list(Request.parse("step=0")))
     print(f"list(step=0): {len(step0)} fields "
           f"(4 members x 2 params + 1 archived above)")
+
+    # --- MARS-style partial retrieve: ranges, wildcards, lazy FieldSet -------
+    fieldset = reader.retrieve_many(Request.parse("number=0/to/2,param=*,step=1/2"))
+    print(f"retrieve_many(number=0/to/2,param=*,step=1/2): {len(fieldset)} fields, "
+          f"aggregated handle = {fieldset.handle().size} bytes")
+
+    # --- wipe reports what it removed (index entries AND store bytes) --------
+    with tempfile.TemporaryDirectory() as td:
+        scratch = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=td)
+        scratch.archive(field_key(9, 0, "2t"), payload)
+        scratch.flush()
+        report = scratch.wipe(field_key(9, 0, "2t"))
+        print(f"wipe: {report.entries_removed} entries, {report.bytes_freed} bytes freed")
 
     # --- retrieve + unpack roundtrip ----------------------------------------
     got = reader.read(field_key(2, 1, "10u"))

@@ -36,7 +36,7 @@ from typing import Any
 import jax
 import numpy as np
 
-from repro.core import AsyncFDB, FDB, Key
+from repro.core import AsyncFDB, FDB, Key, Request, WipeReport
 from .serialization import decode_array, encode_array, flatten_tree, unflatten_tree
 
 __all__ = ["CheckpointManager"]
@@ -159,7 +159,8 @@ class CheckpointManager:
     # --------------------------------------------------------------- restore
     def available_steps(self) -> list[int]:
         steps = set()
-        for e in self.fdb.list({"run": self.run, "kind": "ckpt", "param": "MANIFEST"}):
+        req = Request(run=self.run, kind="ckpt", param="MANIFEST")
+        for e in self.fdb.list(req):
             steps.add(int(e.key["step"]))
         return sorted(steps)
 
@@ -168,18 +169,26 @@ class CheckpointManager:
 
         Elastic restore: the stored fields carry no sharding — a restore onto
         a different mesh simply device_puts with the new shardings.
+
+        The whole step slice (manifest + every shard) comes back as ONE
+        partial-request retrieval — catalogue-resolved, batched — instead of
+        a read round-trip per leaf.
         """
         steps = self.available_steps()
         if not steps:
             raise FileNotFoundError(f"no visible checkpoints for run {self.run!r}")
         step = step if step is not None else steps[-1]
-        raw_manifest = self.fdb.read(self._key(step, "MANIFEST"))
+        fieldset = self.fdb.retrieve_many(
+            Request(run=self.run, kind="ckpt", step=str(step), writer=self.writer)
+        )
+        blobs = {k["param"]: data for k, data in fieldset.read_all().items()}
+        raw_manifest = blobs.get("MANIFEST")
         if raw_manifest is None:
             raise FileNotFoundError(f"step {step} has no manifest (torn write cannot happen — wrong step?)")
         manifest = json.loads(raw_manifest.decode())
         leaves: dict[str, np.ndarray] = {}
         for name in manifest["leaves"]:
-            raw = self.fdb.read(self._key(step, name))
+            raw = blobs.get(name)
             if raw is None:
                 raise FileNotFoundError(f"checkpoint field {name} missing at step {step}")
             leaves[name] = decode_array(raw)
@@ -188,8 +197,10 @@ class CheckpointManager:
             state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)
         return step, state
 
-    def wipe_run(self) -> None:
-        self.fdb.wipe(Key(run=self.run, kind="ckpt"))
+    def wipe_run(self) -> WipeReport:
+        """Remove the run's whole checkpoint dataset — index AND store
+        bytes — and report what went."""
+        return self.fdb.wipe(Key(run=self.run, kind="ckpt"))
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:

@@ -3,9 +3,13 @@
 Public surface:
 
 - :class:`Key`, :class:`Schema` — metadata identifiers and the 3-level split
+- :class:`Request` — the first-class MARS-style request language
+  (``step=0/6/12``, ``step=0/to/240/by/6``, ``param=*``, partial requests)
+- :class:`FDBClient` — the one client protocol every facade implements
 - :class:`FDB`, :func:`make_fdb` — the facade with the paper's semantics
 - :class:`AsyncFDB` — background writer pool + parallel batched reads
 - :class:`FDBRouter`, :func:`make_router` — multi-lane dataset sharding
+- :class:`FieldSet` — lazy MARS retrieval result with an aggregated handle
 - :mod:`repro.core.daos` — the emulated DAOS (MVCC KV/Array object store)
 - :mod:`repro.core.posix` / :mod:`repro.core.daos_backend` — the backends
 - :mod:`repro.core.costmodel` — Lustre-vs-DAOS per-op cost model at scale
@@ -13,9 +17,20 @@ Public surface:
 
 from .async_fdb import AsyncFDB
 from .catalogue import Catalogue, ListEntry
+from .client import FDBClient, WipeReport
 from .datahandle import DataHandle, MemoryDataHandle
 from .fdb import FDB, make_fdb
+from .fieldset import ConcatenatedDataHandle, FieldSet
 from .keys import Key, key_union
+from .request import (
+    Request,
+    RequestSyntaxError,
+    Span,
+    UnknownKeywordError,
+    WILDCARD,
+    as_request,
+    as_span,
+)
 from .router import FDBRouter, make_router
 from .schema import (
     CHECKPOINT_SCHEMA,
@@ -32,6 +47,17 @@ __all__ = [
     "key_union",
     "Schema",
     "SplitKey",
+    "Request",
+    "RequestSyntaxError",
+    "UnknownKeywordError",
+    "Span",
+    "WILDCARD",
+    "as_request",
+    "as_span",
+    "FDBClient",
+    "WipeReport",
+    "FieldSet",
+    "ConcatenatedDataHandle",
     "FDB",
     "make_fdb",
     "AsyncFDB",

@@ -15,8 +15,10 @@ client.  AsyncFDB adds it without changing the semantics:
 - ``drain()`` is the write barrier alone (all queued archives landed in the
   backend, nothing published yet on deferred-visibility backends) — the
   checkpoint manager uses it to order its commit sentinel;
-- ``retrieve_many()`` expands a MARS-style multi-valued request and fans the
-  reads out over a thread pool in batches (parallel batched reads).
+- ``retrieve_many()`` expands a MARS-style request (full OR partial) and
+  fans the reads out over a thread pool in batches — the returned
+  :class:`~repro.core.fieldset.FieldSet` resolves through parallel batched
+  reads.
 
 Writer errors are captured and re-raised on the next ``archive()``/
 ``flush()``/``close()`` — an async archive is not allowed to fail silently.
@@ -28,7 +30,9 @@ facade keeps FDB's transactional last-write-wins replacement semantics.
 
 Composes with :class:`~repro.core.router.FDBRouter` in either order: an
 AsyncFDB over a router gives one queue feeding N lanes; a router over
-AsyncFDB lanes gives a queue per lane.
+AsyncFDB lanes gives a queue per lane.  The shared client surface comes
+from :class:`~repro.core.client.FDBClient`; this class adds only the
+queueing and fan-out.
 """
 
 from __future__ import annotations
@@ -37,12 +41,14 @@ import queue
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Iterable, Iterator, Mapping, Sequence
+from typing import Iterator, Mapping, Sequence
 
 from ..metrics.iostats import IOStats
 from .catalogue import ListEntry
+from .client import FDBClient, WipeReport
 from .datahandle import DataHandle
 from .keys import Key
+from .request import Request
 from .schema import Schema
 
 __all__ = ["AsyncFDB"]
@@ -50,7 +56,7 @@ __all__ = ["AsyncFDB"]
 _STOP = object()
 
 
-class AsyncFDB:
+class AsyncFDB(FDBClient):
     def __init__(
         self,
         fdb,
@@ -152,13 +158,9 @@ class AsyncFDB:
         if self._closed:
             raise RuntimeError("archive() on a closed AsyncFDB")
         self._raise_pending()
-        key = key if isinstance(key, Key) else Key(key)
+        key = self._as_key(key)
         self.schema.validate(key)  # fail fast, in the caller, not the pool
         self._qs[hash(key) % len(self._qs)].put((key, bytes(data), time.perf_counter()))
-
-    def archive_batch(self, items: Sequence[tuple[Key | Mapping[str, str], bytes]]) -> None:
-        for key, data in items:
-            self.archive(key, data)
 
     def drain(self) -> None:
         """Write barrier: block until every queued field has been archived
@@ -187,19 +189,13 @@ class AsyncFDB:
     def retrieve(self, key: Key | Mapping[str, str]) -> DataHandle | None:
         return self.fdb.retrieve(key)
 
-    def read(self, key: Key | Mapping[str, str]) -> bytes | None:
-        return self.fdb.read(key)
-
     def retrieve_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[DataHandle | None]:
         return self.fdb.retrieve_batch(keys)
 
-    def read_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[bytes | None]:
-        return self.fdb.read_batch(keys)
-
-    def _fan_out(self, keys: list[Key], method) -> list:
+    def _fan_out(self, keys: list, method) -> list:
         chunks = [keys[i : i + self._read_batch_size] for i in range(0, len(keys), self._read_batch_size)]
         if len(chunks) <= 1:
-            return method(keys)
+            return method(list(keys))
         pool = self._read_pool()
         futures = [pool.submit(method, c) for c in chunks]
         out: list = []
@@ -207,16 +203,12 @@ class AsyncFDB:
             out.extend(f.result())
         return out
 
-    def retrieve_many(self, request: Mapping[str, Iterable[str] | str]) -> dict[Key, DataHandle | None]:
-        """MARS-style expansion + parallel batched reads: the request's
-        cartesian product is chunked and each chunk retrieved concurrently
-        through the backend's batched path."""
-        keys = self.schema.expand(request)
-        return dict(zip(keys, self._fan_out(keys, self.fdb.retrieve_batch)))
+    # a FieldSet from retrieve_many resolves in ONE fetch (batch_size=None),
+    # and that fetch is the parallel chunked fan-out over the reader pool
+    _fieldset_batch = None
 
-    def read_many(self, request: Mapping[str, Iterable[str] | str]) -> dict[Key, bytes | None]:
-        keys = self.schema.expand(request)
-        return dict(zip(keys, self._fan_out(keys, self.fdb.read_batch)))
+    def _many_fetch(self, keys: list[Key]) -> list[DataHandle | None]:
+        return self._fan_out(keys, self.fdb.retrieve_batch)
 
     # ------------------------------------------------------------- pass-through
     @property
@@ -227,21 +219,22 @@ class AsyncFDB:
     def catalogue(self):
         return self.fdb.catalogue
 
+    def _list(self, request: Request) -> Iterator[ListEntry]:
+        # already validated by the base — skip the inner client's re-check
+        return getattr(self.fdb, "_list", self.fdb.list)(request)
+
+    def _wipe_dataset(self, dataset_key: Key, entries=None) -> WipeReport:
+        # the base wipe() already flushed (drain + publish); this extra
+        # drain covers routers calling straight into lane._wipe_dataset
+        self.drain()
+        return self.fdb._wipe_dataset(dataset_key, entries)
+
     # ------------------------------------------------------------- telemetry
     def io_stats(self) -> list:
         """Backend stats plus this facade's queue/batch telemetry."""
         getter = getattr(self.fdb, "io_stats", None)
         below = list(getter()) if getter is not None else []
         return below + [self.async_stats]
-
-    def stats_snapshot(self) -> dict:
-        return IOStats.merged(self.io_stats()).snapshot()
-
-    def list(self, request: Mapping[str, Iterable[str] | str] | None = None) -> Iterator[ListEntry]:
-        return self.fdb.list(request)
-
-    def wipe(self, dataset_key: Key | Mapping[str, str]) -> None:
-        self.fdb.wipe(dataset_key)
 
     # ---------------------------------------------------------------- lifecycle
     def close(self) -> None:
@@ -266,9 +259,3 @@ class AsyncFDB:
         if flush_err is not None:
             raise flush_err
         self._raise_pending()
-
-    def __enter__(self) -> "AsyncFDB":
-        return self
-
-    def __exit__(self, *exc) -> None:
-        self.close()

@@ -1,0 +1,260 @@
+"""FDBClient — the one client surface shared by every FDB facade.
+
+The reproduction grew three facades (:class:`~repro.core.fdb.FDB`,
+:class:`~repro.core.router.FDBRouter`,
+:class:`~repro.core.async_fdb.AsyncFDB`) that each hand-copied the same
+~13-method matrix; the follow-up interface studies ("DAOS as HPC Storage:
+Exploring Interfaces", 2023) make the point that the API surface — not just
+the backend — bounds the concurrency a client can express, so the surface
+is defined ONCE here and the facades override only what they genuinely
+change (routing, queueing, fan-out).
+
+Primitives a facade must provide: ``archive``, ``retrieve_batch``,
+``flush``, ``_list``, ``_wipe_dataset``, ``io_stats``.  Everything else —
+single retrieves, byte-reads, MARS-style ``retrieve_many`` over full AND
+partial requests, validated ``list``, the store-and-catalogue ``wipe`` with
+its report, context management — is derived here.
+
+Request handling: every request-taking method accepts a
+:class:`~repro.core.request.Request`, MARS text, or a plain mapping; unknown
+keywords raise :class:`~repro.core.request.UnknownKeywordError` EAGERLY (at
+the call, not on first iteration of a lazy listing) on every facade alike.
+"""
+
+from __future__ import annotations
+
+import abc
+import warnings
+from dataclasses import dataclass
+from typing import Iterator, Mapping, Sequence
+
+from .catalogue import ListEntry
+from .datahandle import DataHandle
+from .fieldset import FieldSet
+from .keys import Key
+from .request import Request, as_request
+from .schema import Schema
+
+__all__ = ["FDBClient", "WipeReport"]
+
+
+@dataclass(frozen=True)
+class WipeReport:
+    """What a ``wipe`` actually removed: index entries AND store bytes —
+    wiping is no longer catalogue-only (store objects used to leak)."""
+
+    entries_removed: int = 0
+    bytes_freed: int = 0
+    datasets: tuple[str, ...] = ()
+
+    def __add__(self, other: "WipeReport") -> "WipeReport":
+        return WipeReport(
+            self.entries_removed + other.entries_removed,
+            self.bytes_freed + other.bytes_freed,
+            self.datasets + other.datasets,
+        )
+
+
+class FDBClient(abc.ABC):
+    """Shared FDB client surface (see module docstring)."""
+
+    schema: Schema
+
+    # -------------------------------------------------------- required hooks
+    @abc.abstractmethod
+    def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
+        """Hand one field to the FDB (visibility per backend semantics)."""
+
+    @abc.abstractmethod
+    def retrieve_batch(
+        self, keys: Sequence[Key | Mapping[str, str]]
+    ) -> list[DataHandle | None]:
+        """Vectored retrieve; absent fields come back as None."""
+
+    @abc.abstractmethod
+    def flush(self) -> None:
+        """Block until everything archived by this client is visible."""
+
+    @abc.abstractmethod
+    def _list(self, request: Request) -> Iterator[ListEntry]:
+        """Backend listing of an already-validated request."""
+
+    @abc.abstractmethod
+    def _wipe_dataset(self, dataset_key: Key, entries=None) -> WipeReport:
+        """Remove ONE dataset from catalogue AND store; report what went.
+        ``entries`` is the dataset's listing when the caller already has it
+        (span wipes resolve targets by listing — don't pay the element
+        reads twice); None means list here."""
+
+    @abc.abstractmethod
+    def io_stats(self) -> list:
+        """The distinct IOStats sinks behind this client."""
+
+    # ------------------------------------------------------------- derived IO
+    def _as_key(self, key: Key | Mapping[str, str]) -> Key:
+        return key if isinstance(key, Key) else Key(key)
+
+    def archive_batch(
+        self, items: Sequence[tuple[Key | Mapping[str, str], bytes]]
+    ) -> None:
+        """Archive many fields; semantically sequential ``archive`` calls.
+        Facades with an amortised backend path override this."""
+        for key, data in items:
+            self.archive(key, data)
+
+    def retrieve(self, key: Key | Mapping[str, str]) -> DataHandle | None:
+        return self.retrieve_batch([key])[0]
+
+    def read(self, key: Key | Mapping[str, str]) -> bytes | None:
+        h = self.retrieve(key)
+        if h is None:
+            return None
+        try:
+            return h.read()
+        finally:
+            h.close()
+
+    def read_batch(
+        self, keys: Sequence[Key | Mapping[str, str]]
+    ) -> list[bytes | None]:
+        out: list[bytes | None] = []
+        for h in self.retrieve_batch(keys):
+            if h is None:
+                out.append(None)
+            else:
+                try:
+                    out.append(h.read())
+                finally:
+                    h.close()
+        return out
+
+    def drain(self) -> None:
+        """Write barrier: all accepted archives have reached the backend.
+        Synchronous clients are always drained; queueing facades override."""
+
+    # --------------------------------------------------------------- requests
+    def _validated_request(self, request) -> Request:
+        req = as_request(request)
+        # raises UnknownKeywordError for keywords outside the schema —
+        # eagerly, identically on every facade and backend
+        self.schema.request_levels(req)
+        return req
+
+    def list(self, request=None) -> Iterator[ListEntry]:
+        """All (identifier, location) pairs matching a (possibly partial)
+        request — Request, MARS text, or mapping.  Unknown keywords raise
+        immediately, not on first iteration."""
+        req = self._validated_request(request)
+        return self._list(req)
+
+    def _many_fetch(self, keys: list[Key]) -> Sequence[DataHandle | None]:
+        """The vectored fetch a FieldSet resolves through (override to fan
+        out)."""
+        return self.retrieve_batch(keys)
+
+    _fieldset_batch: int | None = 64
+
+    def retrieve_many(self, request) -> FieldSet:
+        """MARS-style retrieval: a request that is fully specified with
+        exact value lists expands client-side to its cartesian product
+        (absent fields surface as None); anything partial, ranged or
+        wildcarded is resolved against the catalogue (level-pruned
+        ``list()``, so unmatched datasets are never scanned) — ranges match
+        numerically there, so ``step=06`` is found by ``step=0/to/12/by/6``
+        whichever spelling was archived.  Returns a lazy :class:`FieldSet`
+        — iterate ``(Key, DataHandle)`` pairs or take the aggregated
+        streaming handle."""
+        req = self._validated_request(request)
+        if req.is_exact(self.schema):
+            keys = req.expand(self.schema)
+        else:
+            keys = [e.key for e in self._list(req)]
+        return FieldSet(keys, self._many_fetch, batch_size=self._fieldset_batch)
+
+    def read_many(self, request) -> dict[Key, bytes | None]:
+        """Deprecated: use ``retrieve_many(request).read_all()``."""
+        warnings.warn(
+            "FDBClient.read_many() is deprecated; use "
+            "retrieve_many(request).read_all()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.retrieve_many(request).read_all()
+
+    # ------------------------------------------------------------------- wipe
+    def wipe(self, request) -> WipeReport:
+        """Remove whole datasets — index entries AND store data — and report
+        what was removed.  Accepts a full identifier, a dataset key, or a
+        request with spans over the dataset keywords (each matched dataset
+        is wiped); all dataset keywords must be present.
+
+        Wiping is dataset-granular: single-valued non-dataset keywords (a
+        full identifier) are accepted and ignored, but a NARROWING span on
+        one (``step=0/to/2``, ``param=*``, multi-value lists) would suggest
+        a subset wipe this API cannot do — that raises instead of silently
+        deleting the whole dataset."""
+        req = self._validated_request(request)
+        missing = [k for k in self.schema.dataset_keys if k not in req]
+        if missing:
+            raise KeyError(
+                f"wipe request missing dataset keywords {missing} "
+                f"(schema {self.schema.name})"
+            )
+        narrowed = [
+            kw for kw in req
+            if kw not in self.schema.dataset_keys
+            and not (req[kw].is_exact and len(req[kw].values()) == 1)
+        ]
+        if narrowed:
+            raise ValueError(
+                f"wipe removes whole datasets; non-dataset keywords {narrowed} "
+                "carry narrowing spans that cannot be honoured — drop them "
+                "(or pass single values) to wipe the matched datasets"
+            )
+        # a wipe must see everything THIS client archived — queued or
+        # unpublished fields would otherwise dodge catalogue-resolved spans
+        # (deferred-visibility backends) and dangle or survive; flushing
+        # first makes wipe-after-archive well-defined on every facade
+        self.flush()
+        ds_req = Request({k: req[k] for k in self.schema.dataset_keys})
+        report = WipeReport()
+        for ds, entries in self._wipe_targets(ds_req):
+            report = report + self._wipe_dataset(ds, entries)
+        return report
+
+    def _wipe_targets(self, ds_req: Request) -> list[tuple[Key, list | None]]:
+        """The dataset keys a wipe request names (with their listings when
+        resolving already produced them): the cartesian product when every
+        span is an exact value list, else whatever the catalogue resolves —
+        a range like ``date=20200101/to/20260101`` wipes the datasets that
+        actually exist, not millions of no-op products, and the resolving
+        listing is reused for the report instead of listing twice."""
+        if all(ds_req[kw].is_exact for kw in self.schema.dataset_keys):
+            import itertools
+
+            spans = [
+                [(kw, v) for v in ds_req[kw].values()]
+                for kw in self.schema.dataset_keys
+            ]
+            return [(Key(c), None) for c in itertools.product(*spans)]
+        groups: dict[Key, list] = {}
+        for e in self._list(ds_req):
+            groups.setdefault(e.key.subset(self.schema.dataset_keys), []).append(e)
+        return list(groups.items())
+
+    # -------------------------------------------------------------- telemetry
+    def stats_snapshot(self) -> dict:
+        """One consistent, JSON-ready merge of this client's telemetry."""
+        from ..metrics.iostats import IOStats
+
+        return IOStats.merged(self.io_stats()).snapshot()
+
+    # -------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        self.flush()
+
+    def __enter__(self) -> "FDBClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -247,13 +247,16 @@ class DaosCatalogue(Catalogue):
                     yield ListEntry(key_union(dataset_key, colloc_key, element_key), FieldLocation.decode(raw))
 
     def _axis_prunes(self, cont: str, index_oid: ObjectId, el_req: Mapping[str, Iterable[str] | str]) -> bool:
+        from ..request import as_span
+
         for pos, kw in enumerate(self.schema.element_keys):
             if kw not in el_req:
                 continue
-            span = el_req[kw]
-            wanted = {span} if isinstance(span, str) else set(map(str, span))
-            axis_vals = set(self._engine.kv_list(self._pool, cont, self._axis_oid(index_oid, pos)))
-            if not (wanted & axis_vals):
+            span = as_span(el_req[kw])
+            if span.is_wildcard:
+                continue  # matches every written value — nothing to prune
+            axis_vals = self._engine.kv_list(self._pool, cont, self._axis_oid(index_oid, pos))
+            if not any(span.contains(v) for v in axis_vals):
                 return True
         return False
 

@@ -140,6 +140,21 @@ class DaosStore(Store):
             raise ValueError(f"not a daos location: {location}")
         return _DaosArrayHandle(self._engine, location)
 
+    def wipe(self, dataset_key: Key) -> None:
+        """Destroy the dataset's data container (covering the case where the
+        store's pool differs from the catalogue's, whose own wipe only
+        destroys *its* container) and drop the cached container/OID-range
+        state — stale caches would make a re-archive into the wiped dataset
+        skip ``cont_create`` and fail on a destroyed container.  Byte count
+        is unknown at this layer (the container is gone wholesale), so the
+        FDB reports the indexed byte total instead."""
+        cont = dataset_key.stringify()
+        self._engine.cont_destroy(self._pool, cont)  # missing_ok server-side
+        with self._mu:
+            self._containers.discard(cont)
+            self._allocators.pop(cont, None)
+        return None
+
 
 class _DaosArrayHandle(DataHandle):
     def __init__(self, engine, location: FieldLocation):

@@ -14,24 +14,32 @@ Composes any conforming (Catalogue, Store) backend pair and guarantees:
 The one ordering invariant the facade enforces: within ``archive()`` the
 Store archives *before* the Catalogue indexes, and within ``flush()`` the
 Store flushes *before* the Catalogue publishes — so an index entry can never
-point at unpersisted bytes, on either backend.
+point at unpersisted bytes, on either backend.  Symmetrically, ``wipe()``
+removes the index FIRST, then the store objects, so the index never points
+at deleted bytes either.
+
+The client surface (single/batched/MARS-style IO, validated list, wipe
+reports, telemetry) comes from :class:`~repro.core.client.FDBClient`; this
+class provides only the catalogue/store composition.
 """
 
 from __future__ import annotations
 
 import threading
-from typing import Iterable, Iterator, Mapping, Sequence
+from typing import Iterator, Mapping, Sequence
 
 from .catalogue import Catalogue, ListEntry
+from .client import FDBClient, WipeReport
 from .datahandle import DataHandle
 from .keys import Key
+from .request import Request
 from .schema import Schema, SplitKey
 from .store import Store
 
 __all__ = ["FDB", "make_fdb"]
 
 
-class FDB:
+class FDB(FDBClient):
     def __init__(self, catalogue: Catalogue, store: Store):
         if catalogue.schema is None:
             raise ValueError("catalogue must carry a schema")
@@ -42,10 +50,9 @@ class FDB:
         # it observed as archived are published (see flush below)
         self._flush_mu = threading.Lock()
 
-    # ------------------------------------------------------------------ API
+    # ------------------------------------------------------------------ write
     def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
-        key = key if isinstance(key, Key) else Key(key)
-        split = self.schema.split(key)
+        split = self._split(key)
         location = self.store.archive(bytes(data), split.dataset, split.collocation)
         self.catalogue.archive(split.dataset, split.collocation, split.element, location)
 
@@ -65,7 +72,7 @@ class FDB:
         )
 
     def _split(self, key: Key | Mapping[str, str]) -> SplitKey:
-        return self.schema.split(key if isinstance(key, Key) else Key(key))
+        return self.schema.split(self._as_key(key))
 
     def flush(self) -> None:
         # Two-phase when the catalogue supports it: TAKE the pending index
@@ -86,9 +93,9 @@ class FDB:
                 self.store.flush()
                 self.catalogue.flush()
 
+    # ------------------------------------------------------------------- read
     def retrieve(self, key: Key | Mapping[str, str]) -> DataHandle | None:
-        key = key if isinstance(key, Key) else Key(key)
-        split = self.schema.split(key)
+        split = self._split(key)
         location = self.catalogue.retrieve(split.dataset, split.collocation, split.element)
         if location is None:
             return None  # not an error: FDB may be a cache in a larger system
@@ -103,37 +110,32 @@ class FDB:
         )
         return self.store.retrieve_batch(locations)
 
-    def retrieve_many(self, request: Mapping[str, Iterable[str] | str]) -> dict[Key, DataHandle | None]:
-        """MARS-style retrieval: expand a (possibly multi-valued) request
-        into the cartesian product of full identifiers and retrieve them all
-        in one batch.  Sequential single-lane default; :class:`AsyncFDB`
-        overrides this with parallel batched reads."""
-        keys = self.schema.expand(request)
-        return dict(zip(keys, self.retrieve_batch(keys)))
+    def _list(self, request: Request) -> Iterator[ListEntry]:
+        return self.catalogue.list(request)
 
-    def read(self, key: Key | Mapping[str, str]) -> bytes | None:
-        h = self.retrieve(key)
-        if h is None:
-            return None
-        try:
-            return h.read()
-        finally:
-            h.close()
-
-    def read_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[bytes | None]:
-        out: list[bytes | None] = []
-        for h in self.retrieve_batch(keys):
-            if h is None:
-                out.append(None)
-            else:
-                try:
-                    out.append(h.read())
-                finally:
-                    h.close()
-        return out
-
-    def list(self, request: Mapping[str, Iterable[str] | str] | None = None) -> Iterator[ListEntry]:
-        return self.catalogue.list(request or {})
+    # ------------------------------------------------------------------- wipe
+    def _wipe_dataset(self, dataset_key: Key, entries=None) -> WipeReport:
+        """Remove one dataset everywhere: count what the index holds, drop
+        the index, then drop the store objects — index-first, so no reader
+        can hold an index entry pointing at already-deleted bytes."""
+        if entries is None:
+            entries = list(self.catalogue.list(Request(dataset_key)))
+        indexed_bytes = sum(e.location.length for e in entries)
+        self.catalogue.wipe(dataset_key)
+        # the store reports the bytes it physically reclaimed itself; on
+        # layouts where the catalogue's dataset-directory/container removal
+        # already took the data with it, that is 0 and the indexed byte
+        # count stands in
+        store_bytes = self.store.wipe(dataset_key) or 0
+        # report.datasets means "what was actually wiped": an exact
+        # multi-value span may name datasets that never existed — those
+        # no-op wipes must not be listed
+        existed = bool(entries) or store_bytes > 0
+        return WipeReport(
+            entries_removed=len(entries),
+            bytes_freed=max(indexed_bytes, store_bytes),
+            datasets=(dataset_key.stringify(),) if existed else (),
+        )
 
     # ------------------------------------------------------------- telemetry
     def io_stats(self) -> list:
@@ -147,26 +149,11 @@ class FDB:
                 seen.setdefault(id(s), s)
         return list(seen.values())
 
-    def stats_snapshot(self) -> dict:
-        """One consistent, JSON-ready merge of this FDB's telemetry."""
-        from ..metrics.iostats import IOStats
-
-        return IOStats.merged(self.io_stats()).snapshot()
-
-    def wipe(self, dataset_key: Key | Mapping[str, str]) -> None:
-        dataset_key = dataset_key if isinstance(dataset_key, Key) else Key(dataset_key)
-        self.catalogue.wipe(dataset_key.subset(self.schema.dataset_keys))
-
+    # ------------------------------------------------------------- lifecycle
     def close(self) -> None:
         self.flush()
         self.store.close()
         self.catalogue.close()
-
-    def __enter__(self) -> "FDB":
-        return self
-
-    def __exit__(self, *exc) -> None:
-        self.close()
 
 
 def make_fdb(

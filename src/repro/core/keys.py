@@ -19,7 +19,10 @@ from typing import Iterable, Iterator, Mapping
 __all__ = ["Key", "key_union"]
 
 _SEP = ":"
-_FORBIDDEN = {_SEP, "=", ",", "/", "\n"}
+# '/' and '*' belong to the request grammar (spans, wildcards): a key token
+# containing them would silently change meaning when the key is used as a
+# request, so they are forbidden the same way the structural chars are
+_FORBIDDEN = {_SEP, "=", ",", "/", "*", "\n"}
 
 
 def _check_token(tok: str) -> str:
@@ -114,12 +117,16 @@ class Key(Mapping[str, str]):
         return Key((k, self[k]) for k in keywords)
 
     def matches(self, request: Mapping[str, Iterable[str] | str]) -> bool:
-        """True if for every keyword in *request*, our value is within its span."""
+        """True if for every keyword in *request*, our value is within its
+        span.  Spans understand the full MARS syntax — explicit lists,
+        ``a/to/b/by/c`` ranges and ``*`` wildcards — whether given as
+        :class:`~repro.core.request.Span` objects, strings, or iterables."""
+        from .request import as_span  # late: request.py imports Key
+
         for k, span in request.items():
             if k not in self:
                 return False
-            allowed = {span} if isinstance(span, str) else set(map(str, span))
-            if self[k] not in allowed:
+            if not as_span(span).contains(self[k]):
                 return False
         return True
 

@@ -275,9 +275,20 @@ class PosixCatalogue(Catalogue):
         import shutil
 
         ds_s = dataset_key.stringify()
-        shutil.rmtree(os.path.join(self._root, ds_s), ignore_errors=True)
+        ddir = os.path.join(self._root, ds_s)
+        shutil.rmtree(ddir, ignore_errors=True)
         with self._mu:
+            # pending (archived-but-unflushed) entries of the wiped dataset
+            # must die with it: a later flush would otherwise publish index
+            # entries pointing at data files the store wipe just deleted
+            for key in [key for key in self._pending if key[0] == ds_s]:
+                del self._pending[key]
             self._toc_offset.pop(ds_s, None)
             self._toc_records.pop(ds_s, None)
+            # cached segments of the wiped dataset must not satisfy lookups
+            # for a later dataset of the same name
+            prefix = ddir + os.sep
+            for segpath in [p for p in self._segments if p.startswith(prefix)]:
+                del self._segments[segpath]
         lat = self._cm.mds(1) if self._cm else None
         self._stats.account("wipe", mds=1, seconds=lat)

@@ -134,6 +134,34 @@ class PosixStore(Store):
             raise ValueError(f"not a posix location: {location}")
         return _PosixFileHandle(location, stats=self._stats, contention=self._cm)
 
+    def wipe(self, dataset_key: Key) -> int:
+        """Drop the dataset's write stream (a later re-archive must open a
+        FRESH file, not append to a deleted inode) and remove any of its
+        data files still on disk — when the store root differs from the
+        catalogue root, those bytes would otherwise leak.  Returns the bytes
+        physically removed here (0 when the catalogue's dataset-directory
+        removal already took them)."""
+        import shutil
+
+        dataset_s = dataset_key.stringify()
+        with self._mu:
+            ent = self._files.pop(dataset_s, None)
+            if ent is not None:
+                ent[1].close()
+        freed = 0
+        ddir = os.path.join(self._root, dataset_s)
+        if os.path.isdir(ddir):
+            for name in os.listdir(ddir):
+                if name.endswith(".data"):
+                    try:
+                        freed += os.path.getsize(os.path.join(ddir, name))
+                    except OSError:
+                        pass
+            shutil.rmtree(ddir, ignore_errors=True)
+        lat = self._cm.mds(1) if self._cm else None
+        self._stats.account("wipe_store", mds=1, seconds=lat)
+        return freed
+
     def close(self) -> None:
         self.flush()
         with self._mu:

@@ -5,8 +5,9 @@ pair; at scale that single lane becomes the bottleneck (one TOC per dataset
 on POSIX, one index-KV per collocation on DAOS).  The router shards *dataset
 keys* across N fully independent lanes:
 
-- each lane is any FDB-like object (a plain :class:`~repro.core.fdb.FDB`,
-  an :class:`~repro.core.async_fdb.AsyncFDB`, even another router) — lanes
+- each lane is any :class:`~repro.core.client.FDBClient` (a plain
+  :class:`~repro.core.fdb.FDB`, an
+  :class:`~repro.core.async_fdb.AsyncFDB`, even another router) — lanes
   may use DIFFERENT backends (e.g. hot datasets on DAOS, cold on POSIX);
 - placement is a stable hash of the stringified dataset key, so every field
   of a dataset lives in exactly one lane and lookups need no broadcast;
@@ -16,23 +17,27 @@ keys* across N fully independent lanes:
 - ``list()`` merges the per-lane listings (disjoint by construction, so the
   merge is a plain concatenation, no dedup pass).
 
-All lanes must share one schema: the split and the hash must agree.
+All lanes must share one schema: the split and the hash must agree.  The
+shared client surface (reads, MARS-style retrieval, wipe reports) comes
+from :class:`FDBClient` — this class adds only the routing.
 """
 
 from __future__ import annotations
 
 import zlib
-from typing import Iterable, Iterator, Mapping, Sequence
+from typing import Iterator, Mapping, Sequence
 
 from .catalogue import ListEntry
+from .client import FDBClient, WipeReport
 from .datahandle import DataHandle
 from .keys import Key
+from .request import Request
 from .schema import Schema
 
 __all__ = ["FDBRouter", "make_router"]
 
 
-class FDBRouter:
+class FDBRouter(FDBClient):
     def __init__(self, lanes: Sequence):
         lanes = list(lanes)
         if not lanes:
@@ -48,12 +53,24 @@ class FDBRouter:
     # ------------------------------------------------------------------ routing
     def lane_index(self, key: Key | Mapping[str, str]) -> int:
         """Stable hash of the stringified dataset sub-key -> lane."""
-        key = key if isinstance(key, Key) else Key(key)
-        ds = key.subset(self.schema.dataset_keys)
+        ds = self._as_key(key).subset(self.schema.dataset_keys)
         return zlib.crc32(ds.stringify().encode()) % len(self.lanes)
 
     def _lane(self, key: Key | Mapping[str, str]):
         return self.lanes[self.lane_index(key)]
+
+    def _scatter(self, keys: Sequence[Key | Mapping[str, str]], method: str) -> list:
+        """Group *keys* by lane, call the lane's batch *method* per group,
+        reassemble results in input order."""
+        groups: dict[int, list[int]] = {}
+        for i, key in enumerate(keys):
+            groups.setdefault(self.lane_index(key), []).append(i)
+        out: list = [None] * len(keys)
+        for lane_i, idxs in groups.items():
+            results = getattr(self.lanes[lane_i], method)([keys[i] for i in idxs])
+            for i, r in zip(idxs, results):
+                out[i] = r
+        return out
 
     # ---------------------------------------------------------------------- API
     def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
@@ -70,28 +87,18 @@ class FDBRouter:
         for lane in self.lanes:
             lane.flush()
 
+    def drain(self) -> None:
+        # a router over AsyncFDB lanes must forward the write barrier — the
+        # base no-op would silently skip it and a caller's commit ordering
+        # (drain, then sentinel) would break
+        for lane in self.lanes:
+            lane.drain()
+
     def retrieve(self, key: Key | Mapping[str, str]) -> DataHandle | None:
         return self._lane(key).retrieve(key)
 
-    def _scatter(self, keys: Sequence[Key | Mapping[str, str]], method: str) -> list:
-        """Group *keys* by lane, call the lane's batch *method* per group,
-        reassemble results in input order."""
-        groups: dict[int, list[int]] = {}
-        for i, key in enumerate(keys):
-            groups.setdefault(self.lane_index(key), []).append(i)
-        out: list = [None] * len(keys)
-        for lane_i, idxs in groups.items():
-            results = getattr(self.lanes[lane_i], method)([keys[i] for i in idxs])
-            for i, r in zip(idxs, results):
-                out[i] = r
-        return out
-
     def retrieve_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[DataHandle | None]:
         return self._scatter(keys, "retrieve_batch")
-
-    def retrieve_many(self, request: Mapping[str, Iterable[str] | str]) -> dict[Key, DataHandle | None]:
-        keys = self.schema.expand(request)
-        return dict(zip(keys, self.retrieve_batch(keys)))
 
     def read(self, key: Key | Mapping[str, str]) -> bytes | None:
         return self._lane(key).read(key)
@@ -99,14 +106,15 @@ class FDBRouter:
     def read_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[bytes | None]:
         return self._scatter(keys, "read_batch")
 
-    def list(self, request: Mapping[str, Iterable[str] | str] | None = None) -> Iterator[ListEntry]:
+    def _list(self, request: Request) -> Iterator[ListEntry]:
         """Merged listing: lanes hold disjoint datasets, so concatenating
-        the per-lane iterators IS the merge."""
+        the per-lane iterators IS the merge.  The request is already
+        validated — go straight to the lanes' backend listing."""
         for lane in self.lanes:
-            yield from lane.list(request)
+            yield from getattr(lane, "_list", lane.list)(request)
 
-    def wipe(self, dataset_key: Key | Mapping[str, str]) -> None:
-        self._lane(dataset_key).wipe(dataset_key)
+    def _wipe_dataset(self, dataset_key: Key, entries=None) -> WipeReport:
+        return self._lane(dataset_key)._wipe_dataset(dataset_key, entries)
 
     # ------------------------------------------------------------- telemetry
     def io_stats(self) -> list:
@@ -124,9 +132,7 @@ class FDBRouter:
 
     def stats_snapshot(self) -> dict:
         """Merged telemetry plus the per-lane breakdown."""
-        from ..metrics.iostats import IOStats
-
-        snap = IOStats.merged(self.io_stats()).snapshot()
+        snap = super().stats_snapshot()
         snap["lanes"] = [
             lane.stats_snapshot() if hasattr(lane, "stats_snapshot") else {}
             for lane in self.lanes
@@ -144,12 +150,6 @@ class FDBRouter:
                 first_err = first_err or e
         if first_err is not None:
             raise first_err
-
-    def __enter__(self) -> "FDBRouter":
-        return self
-
-    def __exit__(self, *exc) -> None:
-        self.close()
 
 
 def make_router(

@@ -91,31 +91,36 @@ class Schema:
         return Key.destringify(s, self.element_keys)
 
     def expand(self, request: Mapping[str, Iterable[str] | str]) -> list[Key]:
-        """MARS-style request expansion: a request with multi-valued spans
-        (e.g. ``step=[0,1,2], param=[t,u]``) is the cartesian product of its
-        values — one full field identifier per combination, in schema
-        keyword order.  Every schema keyword must be present."""
-        import itertools
+        """Deprecated: use :meth:`Request.expand(schema)
+        <repro.core.request.Request.expand>` — the first-class request type
+        also understands ranges and wildcards."""
+        import warnings
 
-        spans: list[list[tuple[str, str]]] = []
-        for kw in self.all_keys:
-            if kw not in request:
-                raise KeyError(f"request missing schema keyword {kw!r} (schema {self.name})")
-            v = request[kw]
-            vals = [v] if isinstance(v, str) else [str(x) for x in v]
-            if not vals:
-                raise ValueError(f"empty value span for keyword {kw!r}")
-            spans.append([(kw, val) for val in vals])
-        return [Key(combo) for combo in itertools.product(*spans)]
+        from .request import as_request
+
+        warnings.warn(
+            "Schema.expand(request) is deprecated; use "
+            "Request.expand(schema) (repro.core.request)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        # the old expand silently ignored extra keywords — a compat shim
+        # must not be stricter than the API it shims
+        known = {k: v for k, v in request.items() if k in self.all_keys}
+        return as_request(known).expand(self)
 
     def request_levels(self, request: Mapping[str, Iterable[str] | str]):
-        """Split a (possibly partial) request's keywords by level."""
+        """Split a (possibly partial) request's keywords by level.  Unknown
+        keywords raise :class:`~repro.core.request.UnknownKeywordError` —
+        the one rejection path every facade and backend shares."""
+        from .request import UnknownKeywordError
+
+        unknown = set(request) - set(self.all_keys)
+        if unknown:
+            raise UnknownKeywordError(unknown, self.name)
         ds = {k: v for k, v in request.items() if k in self.dataset_keys}
         co = {k: v for k, v in request.items() if k in self.collocation_keys}
         el = {k: v for k, v in request.items() if k in self.element_keys}
-        unknown = set(request) - set(self.all_keys)
-        if unknown:
-            raise KeyError(f"request keywords {sorted(unknown)} not in schema {self.name}")
         return ds, co, el
 
 

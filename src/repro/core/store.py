@@ -85,5 +85,16 @@ class Store(abc.ABC):
         """Vectored ``retrieve``; None passes through (absent fields)."""
         return [None if loc is None else self.retrieve(loc) for loc in locations]
 
+    def wipe(self, dataset_key: Key) -> int | None:
+        """Remove every store object of one dataset and invalidate any
+        cached write state for it (open streams, OID allocators) — without
+        this, ``FDB.wipe`` orphans store-side data and a re-archive into the
+        wiped dataset hits stale handles.  Returns the number of bytes the
+        store physically reclaimed itself, or None when unknown (e.g. the
+        catalogue's dataset-directory/container removal already took the
+        data).  Called AFTER the catalogue wipe, so the index never points
+        at deleted bytes."""
+        return None
+
     def close(self) -> None:  # release cached handles
         pass

@@ -194,7 +194,7 @@ class TestAsyncFDB:
             afdb.flush()
 
     @pytest.mark.parametrize("backend", ["daos", "posix"])
-    def test_read_many_parallel_fanout(self, backend, tmp_path):
+    def test_retrieve_many_parallel_fanout(self, backend, tmp_path):
         writer, reader = make_pair(backend, tmp_path)
         items = [(example_key(step=str(s), param=p, levelist=str(lv)), f"{s}{p}{lv}".encode())
                  for s in range(4) for p in ("u", "v") for lv in range(3)]
@@ -204,7 +204,7 @@ class TestAsyncFDB:
             req = dict(example_key())
             req.update(step=[str(s) for s in range(4)], param=["u", "v"],
                        levelist=[str(lv) for lv in range(3)])
-            got = afdb.read_many(req)
+            got = afdb.retrieve_many(req).read_all()
         assert len(got) == len(items)
         for k, v in items:
             assert got[k] == v

@@ -8,7 +8,7 @@ import tempfile
 
 from proptest import Rand, forall
 
-from repro.core import Key, NWP_SCHEMA_DAOS, make_fdb
+from repro.core import Key, NWP_SCHEMA_DAOS, Request, make_fdb
 from repro.core.daos import DaosEngine
 from repro.core.posix import PosixStats
 
@@ -103,8 +103,8 @@ class TestBatchEquivalence:
                 fdb.archive_batch(items)
                 fdb.flush()
                 got = fdb.retrieve_many(request)
-                keys = fdb.schema.expand(request)
-                assert set(got) == set(keys), backend  # full cartesian product
+                keys = Request(request).expand(fdb.schema)
+                assert set(got.keys) == set(keys), backend  # full cartesian product
                 for k in keys:
                     single = fdb.read(k)
                     if got[k] is None:

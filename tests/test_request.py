@@ -1,0 +1,505 @@
+"""The MARS request language + unified FDBClient surface.
+
+Property tests (see proptest.py) and the PR's acceptance criterion: a
+partial request (``step=0/to/12/by/6, param=*`` with dataset keys fixed)
+retrieves the same fields on posix and daos, through plain FDB, FDBRouter
+and AsyncFDB, via the one shared :class:`FDBClient` surface — and
+``fdb_hammer --request`` exercises the parser end to end.
+"""
+
+import itertools
+import os
+import sys
+import tempfile
+
+import pytest
+
+from proptest import Rand, forall
+
+from repro.core import (
+    AsyncFDB,
+    FDBClient,
+    Key,
+    NWP_SCHEMA_DAOS,
+    NWP_SCHEMA_POSIX,
+    Request,
+    RequestSyntaxError,
+    UnknownKeywordError,
+    WipeReport,
+    as_span,
+    make_fdb,
+    make_router,
+)
+from repro.core.daos import DaosEngine
+from repro.core.request import RangeSpan, ValuesSpan, WildcardSpan
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+
+def example_key(**over) -> Key:
+    base = dict(
+        **{"class": "od"}, stream="oper", expver="0001", date="20231201", time="1200",
+        type="ef", levtype="sfc", number="1", levelist="1", step="0", param="v",
+    )
+    base.update(over)
+    return Key(base)
+
+
+# ---------------------------------------------------------------------------
+# The language itself
+# ---------------------------------------------------------------------------
+
+class TestParser:
+    def test_spans(self):
+        assert as_span("0").values() == ("0",)
+        assert as_span("0/6/12").values() == ("0", "6", "12")
+        assert as_span("0/to/240/by/6").values() == tuple(str(v) for v in range(0, 241, 6))
+        assert as_span("3/to/5").values() == ("3", "4", "5")
+        assert as_span("*").values() is None
+        assert as_span(["a", "b"]).values() == ("a", "b")
+
+    def test_range_matches_numerically(self):
+        span = as_span("0/to/12/by/6")
+        assert span.contains("6") and span.contains("06")  # numeric, not textual
+        assert not span.contains("7") and not span.contains("x")
+
+    def test_range_preserves_zero_padding(self):
+        assert as_span("00/to/18/by/6").values() == ("00", "06", "12", "18")
+
+    def test_verb_and_whitespace(self):
+        r = Request.parse("retrieve,\n  class=od, step=0/6,\n  param=*")
+        assert r.verb == "retrieve"
+        assert r["step"].values() == ("0", "6")
+        assert r["param"].is_wildcard
+
+    def test_literal_to_token_is_a_value(self):
+        # a single token 'to' is a value, not a malformed range
+        assert as_span("to").values() == ("to",)
+
+    @pytest.mark.parametrize("bad", ["step=", "step=0//6", "0/to", "a/to/b", "0/to/6/by/0", "=x"])
+    def test_malformed_rejected(self, bad):
+        with pytest.raises(RequestSyntaxError):
+            Request.parse(bad) if "=" in bad else as_span(bad)
+
+    @forall()
+    def test_parse_format_roundtrip(self, r: Rand):
+        spans = {}
+        for i in range(r.int(1, 6)):
+            kind = r.choice(["values", "range", "wild"])
+            if kind == "values":
+                span = ValuesSpan([r.token() for _ in range(r.int(1, 4))])
+            elif kind == "range":
+                start = r.int(0, 50)
+                span = RangeSpan(start, start + r.int(0, 100), r.int(1, 7))
+            else:
+                span = WildcardSpan()
+            spans[f"kw{i}"] = span
+        req = Request(spans, verb=r.choice([None, "retrieve", "list"]))
+        assert Request.parse(req.format()) == req
+
+    @forall(n_cases=15)
+    def test_expand_equals_itertools_product(self, r: Rand):
+        # fully-specified request == the plain cartesian product, in schema
+        # keyword order, whatever mix of list and range spans is used
+        values = {}
+        spans = {}
+        for kw in NWP_SCHEMA_DAOS.all_keys:
+            if r.int(0, 3) == 0:
+                lo = r.int(0, 9)
+                hi = lo + r.int(0, 3)
+                spans[kw] = f"{lo}/to/{hi}"
+                values[kw] = [str(v) for v in range(lo, hi + 1)]
+            else:
+                values[kw] = sorted({r.token(4) for _ in range(r.int(1, 3))})
+                spans[kw] = "/".join(values[kw])
+        got = Request(spans).expand(NWP_SCHEMA_DAOS)
+        want = [
+            Key(zip(NWP_SCHEMA_DAOS.all_keys, combo))
+            for combo in itertools.product(*(values[kw] for kw in NWP_SCHEMA_DAOS.all_keys))
+        ]
+        assert got == want
+
+    def test_expand_rejects_partial_and_wildcard(self):
+        with pytest.raises(KeyError):
+            Request.parse("step=0").expand(NWP_SCHEMA_DAOS)
+        full = dict(example_key())
+        full["param"] = "*"
+        with pytest.raises(ValueError):
+            Request(full).expand(NWP_SCHEMA_DAOS)
+
+    def test_request_grammar_chars_forbidden_in_key_tokens(self):
+        # a key token '*' (or one containing '/') would silently become a
+        # wildcard/span when the key is used as a request — e.g. a wipe
+        # over-matching every dataset — so Key rejects them outright
+        with pytest.raises(ValueError):
+            Key(param="*")
+        with pytest.raises(ValueError):
+            Key(step="0/6")
+
+    def test_conflicting_duplicate_keyword_rejected(self):
+        with pytest.raises(RequestSyntaxError, match="conflicting"):
+            Request.parse("step=0,param=t,step=6")
+        # identical repeats are harmless
+        assert Request.parse("step=0,step=0")["step"].values() == ("0",)
+
+    def test_key_matches_spans(self):
+        k = example_key(step="6", param="t")
+        assert k.matches({"step": "0/to/12/by/6"})
+        assert k.matches({"param": "*", "step": ["0", "6"]})
+        assert not k.matches({"step": "0/to/12/by/5"})
+        assert not k.matches({"missing_kw": "*"})
+
+
+# ---------------------------------------------------------------------------
+# The shared client surface, across facades x backends
+# ---------------------------------------------------------------------------
+
+STEPS = ("0", "6", "12", "18")
+PARAMS = ("t", "u", "v")
+DATES = ("20231201", "20231202")
+
+
+def _populate(client) -> list[tuple[Key, bytes]]:
+    items = [
+        (example_key(date=d, step=s, param=p), f"{d}/{s}/{p}".encode())
+        for d in DATES for s in STEPS for p in PARAMS
+    ]
+    client.archive_batch(items)
+    client.flush()
+    return items
+
+
+def _clients(backend, tmp_path):
+    """The three facades over ONE backend (fresh storage each)."""
+    if backend == "daos":
+        schema = NWP_SCHEMA_DAOS
+        mk = lambda sub: make_fdb("daos", schema=schema, engine=DaosEngine())  # noqa: E731
+        mk_router = lambda: make_router("daos", 2, schema=schema, engine=DaosEngine())  # noqa: E731
+    else:
+        schema = NWP_SCHEMA_POSIX
+        mk = lambda sub: make_fdb("posix", schema=schema, root=str(tmp_path / sub))  # noqa: E731
+        mk_router = lambda: make_router("posix", 2, schema=schema, root=str(tmp_path / "router"))  # noqa: E731
+    return [
+        ("fdb", mk("plain")),
+        ("router", mk_router()),
+        ("async", AsyncFDB(mk("async"), writers=2, read_batch_size=4, owns_fdb=True)),
+    ]
+
+
+PARTIAL = "step=0/to/12/by/6,param=*"  # the acceptance-criterion request
+
+
+@pytest.mark.parametrize("backend", ["daos", "posix"])
+def test_partial_request_same_fields_across_all_facades(backend, tmp_path):
+    """THE acceptance criterion: a partial request (range + wildcard,
+    dataset keys omitted entirely) retrieves the same fields through every
+    facade, on both backends, via the shared FDBClient surface."""
+    want = {
+        (d, s, p): f"{d}/{s}/{p}".encode()
+        for d in DATES for s in ("0", "6", "12") for p in PARAMS
+    }
+    for name, client in _clients(backend, tmp_path):
+        assert isinstance(client, FDBClient), name
+        try:
+            _populate(client)
+            got = client.retrieve_many(PARTIAL).read_all()
+            assert {
+                (k["date"], k["step"], k["param"]): v for k, v in got.items()
+            } == want, (backend, name)
+        finally:
+            client.close()
+
+
+@pytest.mark.parametrize("backend", ["daos", "posix"])
+def test_partial_retrieve_equals_list_then_retrieve_batch(backend, tmp_path):
+    """Equivalence property: partial-request retrieve == list() the request,
+    then retrieve_batch the listed keys."""
+    requests = [
+        PARTIAL,
+        "param=t/u",
+        f"date={DATES[0]},step=6/to/18/by/6",
+        "step=*",
+    ]
+    for name, client in _clients(backend, tmp_path):
+        try:
+            _populate(client)
+            for req in requests:
+                via_many = {k: h.read() for k, h in client.retrieve_many(req) if h}
+                listed = [e.key for e in client.list(req)]
+                via_list = {
+                    k: h.read() for k, h in zip(listed, client.retrieve_batch(listed))
+                }
+                assert via_many == via_list, (backend, name, req)
+        finally:
+            client.close()
+
+
+@pytest.mark.parametrize("backend", ["daos", "posix"])
+def test_ranged_request_matches_numerically_even_when_full(backend, tmp_path):
+    """A range span finds whatever spelling was archived (``step=06``) even
+    in an otherwise fully-specified request: ranges always resolve via the
+    catalogue, so full and partial use of the same span agree."""
+    fdb = (make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=DaosEngine())
+           if backend == "daos"
+           else make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "z")))
+    fdb.archive(example_key(step="06"), b"padded")
+    fdb.flush()
+    full = dict(example_key())
+    full["step"] = "0/to/12/by/6"
+    got = fdb.retrieve_many(full).read_all()
+    assert [k["step"] for k in got] == ["06"] and got[example_key(step="06")] == b"padded"
+    fdb.close()
+
+
+def test_read_all_resolves_in_one_fetch(tmp_path):
+    """Whole-set materialisation keeps the backend's whole-batch
+    amortisation: one retrieve_batch call, not len/batch_size rounds."""
+    fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "o"))
+    items = [(example_key(step=str(s), param=p), b"x")
+             for s in range(50) for p in PARAMS]  # 150 > the 64-chunk default
+    fdb.archive_batch(items)
+    fdb.flush()
+    calls = []
+    orig = fdb.retrieve_batch
+    fdb.retrieve_batch = lambda keys: calls.append(len(keys)) or orig(keys)
+    req = dict(example_key())
+    req.update(step=[str(s) for s in range(50)], param=list(PARAMS))
+    assert len(fdb.retrieve_many(req).read_all()) == len(items)
+    assert calls == [len(items)], f"expected one whole-batch fetch, got {calls}"
+    fdb.close()
+
+
+@pytest.mark.parametrize("backend", ["daos", "posix"])
+def test_unknown_keyword_rejected_eagerly_everywhere(backend, tmp_path):
+    """list()/retrieve_many()/wipe() raise UnknownKeywordError AT THE CALL
+    (not on first iteration), identically on every facade."""
+    for name, client in _clients(backend, tmp_path):
+        try:
+            with pytest.raises(UnknownKeywordError):
+                client.list({"bogus": "1"})
+            with pytest.raises(UnknownKeywordError):
+                client.retrieve_many("bogus=1")
+            with pytest.raises(UnknownKeywordError):
+                client.wipe(dict(example_key(), bogus="1"))
+        finally:
+            client.close()
+
+
+@pytest.mark.parametrize("backend", ["daos", "posix"])
+def test_fieldset_lazy_and_aggregated_handle(backend, tmp_path):
+    for name, client in _clients(backend, tmp_path):
+        try:
+            _populate(client)
+            fs = client.retrieve_many(PARTIAL)
+            assert len(fs) == len(DATES) * 3 * len(PARAMS)
+            # aggregated streaming handle == concatenation, byte-addressable
+            # across field boundaries
+            whole = fs.data()
+            h = fs.handle()
+            assert h.size == len(whole)
+            for off, ln in ((0, 5), (7, 20), (len(whole) - 9, 9)):
+                assert h.read_range(off, ln) == whole[off : off + ln]
+            # a full request including absent fields surfaces them as None
+            req = dict(example_key())
+            req["param"] = ["t", "zz"]
+            fs2 = client.retrieve_many(req)
+            assert [k["param"] for k in fs2.missing()] == ["zz"]
+        finally:
+            client.close()
+
+
+@pytest.mark.parametrize("backend", ["daos", "posix"])
+def test_wipe_reports_and_rearchive_works(backend, tmp_path):
+    """wipe() goes through catalogue AND store: it reports what it removed,
+    and a re-archive into the wiped dataset works (the store's stale
+    write-stream/OID caches used to orphan it)."""
+    for name, client in _clients(backend, tmp_path):
+        try:
+            items = _populate(client)
+            per_dataset = len(STEPS) * len(PARAMS)
+            report = client.wipe(example_key(date=DATES[0]))
+            assert isinstance(report, WipeReport), name
+            assert report.entries_removed == per_dataset, (backend, name)
+            assert report.bytes_freed >= sum(
+                len(v) for k, v in items if k["date"] == DATES[0]
+            ), (backend, name)
+            assert report.datasets and DATES[0] in report.datasets[0]
+            # the other dataset is untouched
+            assert client.read(example_key(date=DATES[1])) == f"{DATES[1]}/0/v".encode()
+            assert client.read(example_key(date=DATES[0])) is None
+            # re-archive into the wiped dataset must work, not hit stale caches
+            client.archive(example_key(date=DATES[0]), b"again")
+            client.flush()
+            assert client.read(example_key(date=DATES[0])) == b"again"
+        finally:
+            client.close()
+
+
+def test_wipe_sees_unflushed_archives_posix(tmp_path):
+    """wipe() must cover fields this client archived but never flushed: the
+    entry may neither dangle (index pointing at wiped store bytes after a
+    later flush) nor dodge the wipe — wipe flushes first, so it counts and
+    removes them."""
+    fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "w"))
+    k = example_key()
+    fdb.archive(k, b"unflushed")
+    report = fdb.wipe(k)          # wipe BEFORE any explicit flush
+    assert report.entries_removed == 1
+    fdb.flush()                   # must not resurrect a phantom entry
+    assert fdb.read(k) is None
+    assert list(fdb.list()) == []
+    fdb.close()
+
+
+def test_catalogue_wipe_drops_pending_entries_posix(tmp_path):
+    """Direct catalogue wipe (no client-level flush-first) must still drop
+    archived-but-unpublished entries of the dataset — a later flush would
+    otherwise publish index entries at store bytes the wipe deleted."""
+    fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "w"))
+    k = example_key()
+    fdb.archive(k, b"unflushed")
+    ds = k.subset(fdb.schema.dataset_keys)
+    fdb.catalogue.wipe(ds)
+    fdb.store.wipe(ds)
+    fdb.flush()
+    assert fdb.read(k) is None
+    assert list(fdb.list()) == []
+    fdb.close()
+
+
+@pytest.mark.parametrize("backend", ["daos", "posix"])
+def test_async_wipe_with_span_covers_queued_archives(backend, tmp_path):
+    """A wildcard wipe through AsyncFDB must land queued archives BEFORE
+    resolving its targets — a dataset still sitting in the queue would
+    otherwise silently survive."""
+    inner = (make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=DaosEngine())
+             if backend == "daos"
+             else make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "w")))
+    afdb = AsyncFDB(inner, writers=2, owns_fdb=True)
+    k = example_key()
+    afdb.archive(k, b"queued")
+    report = afdb.wipe(dict(example_key(), date="*"))  # catalogue-resolved span
+    assert report.entries_removed == 1 and report.datasets, "queued dataset missed"
+    afdb.flush()
+    assert afdb.read(k) is None
+    assert list(afdb.list()) == []
+    afdb.close()
+
+
+def test_wipe_spans_multiple_datasets(tmp_path):
+    fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "w"))
+    _populate(fdb)
+    report = fdb.wipe(dict(example_key(), date="/".join(DATES)))
+    assert len(report.datasets) == 2
+    assert report.entries_removed == 2 * len(STEPS) * len(PARAMS)
+    assert list(fdb.list()) == []
+    fdb.close()
+
+
+def test_wipe_requires_full_dataset_key(tmp_path):
+    fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "w"))
+    with pytest.raises(KeyError):
+        fdb.wipe({"date": "20231201"})  # class/stream/expver/time missing
+    fdb.close()
+
+
+def test_wipe_rejects_narrowing_non_dataset_spans(tmp_path):
+    """A span on a non-dataset keyword suggests a subset wipe that dataset-
+    granular wiping cannot honour — it must raise, not silently delete the
+    whole dataset (full single-valued identifiers stay accepted)."""
+    fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "w"))
+    _populate(fdb)
+    for bad in ("step=0/to/2", "param=*", "step=0/6"):
+        kw, _, span = bad.partition("=")
+        with pytest.raises(ValueError, match="narrowing"):
+            fdb.wipe(dict(example_key(date=DATES[0]), **{kw: span}))
+    assert len(list(fdb.list())) == 2 * len(STEPS) * len(PARAMS), "nothing wiped"
+    fdb.close()
+
+
+def test_router_drain_forwards_to_async_lanes():
+    """drain() through a router over AsyncFDB lanes is a real write barrier
+    (the base no-op would silently skip the lanes' queues)."""
+    from repro.core import FDBRouter
+
+    lanes = [
+        AsyncFDB(make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=DaosEngine()),
+                 writers=2, owns_fdb=True)
+        for _ in range(2)
+    ]
+    router = FDBRouter(lanes)
+    items = [(example_key(date=d, step=str(s)), f"{d}{s}".encode())
+             for d in DATES for s in range(4)]
+    for k, v in items:
+        router.archive(k, v)
+    router.drain()  # on DAOS, drained == visible (flush is a no-op)
+    for k, v in items:
+        assert router.read(k) == v, "field still queued after drain()"
+    router.close()
+
+
+def test_fieldset_contains_accepts_plain_mappings(tmp_path):
+    fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "w"))
+    _populate(fdb)
+    fs = fdb.retrieve_many(PARTIAL)
+    k = example_key(date=DATES[0])
+    assert k in fs and dict(k) in fs
+    assert dict(k, param="zz") not in fs
+    assert 42 not in fs
+    fdb.close()
+
+
+def test_daos_store_wipe_covers_split_pools():
+    """Catalogue and store on DIFFERENT pools: the catalogue wipe cannot
+    reach the store's container, so Store.wipe must destroy it."""
+    from repro.core.daos_backend import DaosCatalogue, DaosStore
+    from repro.core.fdb import FDB
+
+    eng = DaosEngine()
+    fdb = FDB(DaosCatalogue(eng, NWP_SCHEMA_DAOS, pool="meta"), DaosStore(eng, pool="data"))
+    k = example_key()
+    fdb.archive(k, b"x" * 64)
+    fdb.flush()
+    ds = k.subset(NWP_SCHEMA_DAOS.dataset_keys).stringify()
+    assert eng.cont_exists("data", ds)
+    fdb.wipe(k)
+    assert not eng.cont_exists("data", ds), "store container leaked"
+    fdb.archive(k, b"y" * 64)
+    assert fdb.read(k) == b"y" * 64
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims + hammer integration
+# ---------------------------------------------------------------------------
+
+def test_legacy_names_warn_but_work(tmp_path):
+    fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "d"))
+    _populate(fdb)
+    req = dict(example_key())
+    req["param"] = list(PARAMS)
+    with pytest.warns(DeprecationWarning, match="read_many"):
+        got = fdb.read_many(req)
+    assert len(got) == len(PARAMS) and all(v is not None for v in got.values())
+    with pytest.warns(DeprecationWarning, match="Schema.expand"):
+        keys = fdb.schema.expand(req)
+    assert keys == Request(req).expand(fdb.schema)
+    fdb.close()
+
+
+def test_fdb_hammer_request_mode_end_to_end():
+    """The benchmark's --request path drives the parser + shared surface."""
+    from fdb_hammer import HammerSpec, make_backend, run_hammer, run_request
+
+    spec = HammerSpec(n_procs=2, n_steps=2, n_params=3, n_levels=2)
+    for backend in ("daos", "posix"):
+        with tempfile.TemporaryDirectory() as td:
+            fdb = make_backend(backend, root=td, engine=None)
+            try:
+                run_hammer(fdb, spec, "archive")
+                res = run_request(fdb, "step=0/to/1,param=*")
+            finally:
+                fdb.close()
+        want = spec.n_procs * spec.n_steps * spec.n_params * spec.n_levels
+        assert res["matched_fields"] == want, backend
+        assert res["present_fields"] == want, backend
+        assert res["bytes"] == want * spec.field_size, backend
