@@ -23,6 +23,18 @@ first I/O start).
 
     PYTHONPATH=src python benchmarks/fdb_hammer.py --procs 4
 
+Declarative config mode (``--config``): build the FDB under test from a
+JSON config tree (:func:`repro.core.config.build_fdb`) instead of the
+hard-wired backends, and sweep it through the I/O modes — the paper's
+tiered hot(DAOS)/cold(POSIX) deployment is the built-in ``tiered`` config:
+
+    PYTHONPATH=src python benchmarks/fdb_hammer.py --config tiered --procs 4
+    PYTHONPATH=src python benchmarks/fdb_hammer.py --config my_fdb.json
+    PYTHONPATH=src python benchmarks/fdb_hammer.py --config '{"backend": "daos"}'
+
+Local ``posix`` configs may omit ``root`` — the hammer fills in a scratch
+directory per tier, so one JSON document runs anywhere.
+
 Contended client-scaling sweep (paper Figs 3/4: per-client bandwidth under
 rising client counts) — drives the real backends through the contention
 model (:mod:`repro.metrics.contention`) on a deterministic virtual clock
@@ -47,6 +59,7 @@ from repro.core import (
     NWP_SCHEMA_DAOS,
     NWP_SCHEMA_POSIX,
     Request,
+    build_fdb,
     make_fdb,
     make_router,
 )
@@ -61,6 +74,9 @@ __all__ = [
     "make_backend",
     "run_hammer_contended",
     "scaling_sweep",
+    "TIERED_CONFIG",
+    "load_config",
+    "run_config",
 ]
 
 GiB = float(1 << 30)
@@ -250,6 +266,90 @@ def run_request(fdb, request_text: str) -> dict:
         "bytes": sum(len(v) for v in present),
         "seconds": dt,
     }
+
+
+# ---------------------------------------------------------------------------
+# Declarative config mode (--config): the FDB under test from a JSON tree
+# ---------------------------------------------------------------------------
+
+#: the paper's tiered deployment as one declarative document: the first
+#: ensemble member is the "operational hot" stream on DAOS NVM, everything
+#: else lands on the cold POSIX archive — per-tier schemas use the paper's
+#: per-backend optimal keyword placement (§5.1)
+TIERED_CONFIG: dict = {
+    "type": "select",
+    "rules": [
+        {"match": "number=0", "fdb": {"backend": "daos", "schema": "nwp-daos"}},
+    ],
+    "default": {"backend": "posix", "schema": "nwp-posix"},
+}
+
+
+def load_config(source: str) -> dict:
+    """Resolve the ``--config`` argument: the built-in ``tiered`` demo,
+    inline JSON (starts with ``{``), or a path to a JSON file."""
+    if source == "tiered":
+        return json.loads(json.dumps(TIERED_CONFIG))  # deep copy
+    if source.lstrip().startswith("{"):
+        return json.loads(source)
+    with open(source) as f:
+        return json.load(f)
+
+
+def _fill_posix_roots(cfg, scratch: str, counter: list | None = None,
+                      in_template: bool = False):
+    """Give every local posix tier lacking a ``root`` its own directory
+    under *scratch*, so a config document needs no machine-specific paths.
+    Inside a ``dist`` template the filled root keeps a ``{lane}``
+    placeholder — the template is instantiated once per lane, and lanes
+    need independent roots (shared TOCs would duplicate every listing)."""
+    counter = counter if counter is not None else [0]
+    if isinstance(cfg, dict):
+        is_local = cfg.get("type", "local" if "backend" in cfg else None) == "local"
+        if is_local and cfg.get("backend") == "posix" and "root" not in cfg:
+            import os
+
+            root = os.path.join(scratch, f"tier{counter[0]}")
+            cfg["root"] = os.path.join(root, "lane{lane}") if in_template else root
+            counter[0] += 1
+        for k, v in cfg.items():
+            _fill_posix_roots(v, scratch, counter, in_template or k == "template")
+    elif isinstance(cfg, list):
+        for v in cfg:
+            _fill_posix_roots(v, scratch, counter, in_template)
+    return cfg
+
+
+def run_config(config: dict, spec: HammerSpec, io_modes=IO_MODES) -> list[dict]:
+    """Sweep one config-built FDB through the I/O modes: fresh tree +
+    scratch roots per cell, archive then retrieve then a listing, with the
+    per-tier/per-lane telemetry breakdown when the tree exposes one."""
+    import copy
+    import tempfile
+
+    rows = []
+    for io in io_modes:
+        cell = replace(spec, io=io)
+        with tempfile.TemporaryDirectory() as td:
+            cfg = _fill_posix_roots(copy.deepcopy(config), td)
+            with build_fdb(cfg) as fdb:
+                for s in fdb.io_stats():
+                    s.reset()  # a config may still name a shared/global sink
+                w = run_hammer(fdb, cell, "archive")
+                r = run_hammer(fdb, cell, "retrieve")
+                n_step0 = sum(1 for _ in fdb.list({"step": "0"}))
+                snap = fdb.stats_snapshot()
+        parts = snap.get("tiers") or snap.get("lanes") or []
+        rows.append({
+            "io": io,
+            "write_GiBps": w["bandwidth_GiBps"],
+            "read_GiBps": r["bandwidth_GiBps"],
+            "us_per_field_w": w["us_per_field"],
+            "listed_step0": n_step0,
+            "n_parts": len(parts),
+            "part_bytes_written": [p.get("bytes_written", 0) for p in parts],
+        })
+    return rows
 
 
 # ---------------------------------------------------------------------------
@@ -452,10 +552,31 @@ def main() -> None:
                          'request through the shared client surface (e.g. '
                          '"step=0/to/4/by/2,param=*" — ranges, wildcards and '
                          "partial requests all work)")
+    ap.add_argument("--config", default=None, metavar="JSON|PATH|tiered",
+                    help="build the FDB under test from a declarative config "
+                         "(repro.core.config grammar) and sweep it through the "
+                         "io modes; 'tiered' is the built-in hot(DAOS)/cold("
+                         "POSIX) select config, otherwise inline JSON or a "
+                         "path to a JSON file (posix roots are auto-filled)")
     args = ap.parse_args()
 
     spec = HammerSpec(n_procs=args.procs, n_steps=args.steps, n_params=args.params,
                       n_levels=args.levels, field_size=args.field_size, io=args.io)
+
+    if args.config:
+        config = load_config(args.config)
+        label = "inline" if args.config.lstrip().startswith("{") else args.config
+        print(f"fdb-hammer config mode ({label}): "
+              f"{spec.n_procs} procs x {spec.fields_per_proc} fields x {spec.field_size} B\n")
+        print(f"{'io':>8s} {'write GiB/s':>12s} {'read GiB/s':>11s} {'us/field(w)':>12s} "
+              f"{'list(step=0)':>12s} {'tiers/lanes':>11s}")
+        for row in run_config(config, spec):
+            print(f"{row['io']:>8s} {row['write_GiBps']:12.3f} {row['read_GiBps']:11.3f} "
+                  f"{row['us_per_field_w']:12.1f} {row['listed_step0']:12d} {row['n_parts']:11d}")
+            if row["part_bytes_written"]:
+                parts = ", ".join(f"{b / (1 << 20):.1f} MiB" for b in row["part_bytes_written"])
+                print(f"{'':8s} per-part bytes written: {parts}")
+        return
 
     if args.request:
         import tempfile

@@ -31,12 +31,12 @@ from __future__ import annotations
 import json
 import queue
 import threading
-from typing import Any
+from typing import Any, Mapping
 
 import jax
 import numpy as np
 
-from repro.core import AsyncFDB, FDB, Key, Request, WipeReport
+from repro.core import AsyncFDB, FDBClient, Key, Request, WipeReport
 from .serialization import decode_array, encode_array, flatten_tree, unflatten_tree
 
 __all__ = ["CheckpointManager"]
@@ -45,7 +45,7 @@ __all__ = ["CheckpointManager"]
 class CheckpointManager:
     def __init__(
         self,
-        fdb: FDB,
+        fdb: FDBClient | Mapping,
         run: str,
         *,
         writer: str = "w0",
@@ -53,6 +53,15 @@ class CheckpointManager:
         keep: int | None = None,
         io_writers: int = 2,
     ):
+        # declarative construction: a config mapping (plain dict or
+        # FDBConfig) builds the checkpoint plane here, and the manager owns
+        # it — close() tears the whole tree down along with the writers
+        self._owns_fdb = False
+        if isinstance(fdb, Mapping):
+            from repro.core import build_fdb
+
+            fdb = build_fdb(fdb)
+            self._owns_fdb = True
         self.fdb = fdb
         self.run = run
         self.writer = writer
@@ -206,8 +215,10 @@ class CheckpointManager:
     def close(self) -> None:
         """Drain queued checkpoints and stop the background writer machinery
         (the snapshot thread and, if this manager created it, the AsyncFDB
-        writer pool).  The caller's FDB stays open.  Threads are stopped
-        even when a queued write failed; the error re-raises afterwards."""
+        writer pool).  A caller-provided FDB stays open; a config-built one
+        (the manager owns it) is closed with the manager.  Threads are
+        stopped even when a queued write failed; the error re-raises
+        afterwards."""
         wait_err: Exception | None = None
         try:
             self.wait()
@@ -225,6 +236,12 @@ class CheckpointManager:
             # reset so a later save() respawns the lane (reusable manager)
             self._afdb = None
             self._owns_afdb = False
+        if self._owns_fdb:
+            try:
+                self.fdb.close()
+            except Exception as e:  # noqa: BLE001
+                wait_err = wait_err or e
+            self._owns_fdb = False
         if wait_err is not None:
             raise wait_err
         if self._errors:

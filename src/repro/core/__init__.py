@@ -6,7 +6,11 @@ Public surface:
 - :class:`Request` — the first-class MARS-style request language
   (``step=0/6/12``, ``step=0/to/240/by/6``, ``param=*``, partial requests)
 - :class:`FDBClient` — the one client protocol every facade implements
+- :class:`FDBConfig`, :func:`build_fdb` — declarative, JSON round-trippable
+  composition of any facade tree (``local``/``select``/``dist``/``async``),
+  with a pluggable backend registry (:func:`register_backend`)
 - :class:`FDB`, :func:`make_fdb` — the facade with the paper's semantics
+- :class:`SelectFDB` — tiered metadata routing (hot DAOS / cold POSIX)
 - :class:`AsyncFDB` — background writer pool + parallel batched reads
 - :class:`FDBRouter`, :func:`make_router` — multi-lane dataset sharding
 - :class:`FieldSet` — lazy MARS retrieval result with an aggregated handle
@@ -18,6 +22,14 @@ Public surface:
 from .async_fdb import AsyncFDB
 from .catalogue import Catalogue, ListEntry
 from .client import FDBClient, WipeReport
+from .config import (
+    ConfigError,
+    FDBConfig,
+    build_fdb,
+    register_backend,
+    register_schema,
+    registered_backends,
+)
 from .datahandle import DataHandle, MemoryDataHandle
 from .fdb import FDB, make_fdb
 from .fieldset import ConcatenatedDataHandle, FieldSet
@@ -32,6 +44,7 @@ from .request import (
     as_span,
 )
 from .router import FDBRouter, make_router
+from .select import SelectFDB
 from .schema import (
     CHECKPOINT_SCHEMA,
     DATASET_SCHEMA,
@@ -60,9 +73,16 @@ __all__ = [
     "ConcatenatedDataHandle",
     "FDB",
     "make_fdb",
+    "SelectFDB",
     "AsyncFDB",
     "FDBRouter",
     "make_router",
+    "FDBConfig",
+    "ConfigError",
+    "build_fdb",
+    "register_backend",
+    "register_schema",
+    "registered_backends",
     "Catalogue",
     "ListEntry",
     "Store",

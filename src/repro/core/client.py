@@ -26,7 +26,7 @@ from __future__ import annotations
 import abc
 import warnings
 from dataclasses import dataclass
-from typing import Iterator, Mapping, Sequence
+from typing import Iterable, Iterator, Mapping, Sequence
 
 from .catalogue import ListEntry
 from .datahandle import DataHandle
@@ -48,11 +48,23 @@ class WipeReport:
     datasets: tuple[str, ...] = ()
 
     def __add__(self, other: "WipeReport") -> "WipeReport":
+        """Aggregate two reports.  Dataset names are deduplicated (order
+        preserved): tiered/fan-out wipes (SelectFDB, FDBRouter) each remove
+        their slice of the SAME dataset, which is one wiped dataset, not
+        two — counts and bytes still sum, they cover disjoint entries."""
         return WipeReport(
             self.entries_removed + other.entries_removed,
             self.bytes_freed + other.bytes_freed,
-            self.datasets + other.datasets,
+            self.datasets
+            + tuple(d for d in other.datasets if d not in self.datasets),
         )
+
+    @classmethod
+    def merged(cls, reports: Iterable["WipeReport"]) -> "WipeReport":
+        total = cls()
+        for r in reports:
+            total = total + r
+        return total
 
 
 class FDBClient(abc.ABC):

@@ -167,37 +167,35 @@ def make_fdb(
     contention=None,
     **kw,
 ) -> FDB:
-    """Factory: ``backend in {'posix', 'daos'}``.
+    """Single-pair factory — a thin shim over the declarative config layer
+    (:func:`repro.core.config.build_fdb`); ``backend`` is any registered
+    backend name (``'posix'``/``'daos'`` register themselves).
 
     posix: ``root`` directory required; ``stats``/``contention`` reach the
     store + catalogue (default: process-global ``POSIX_STATS``, no model).
-    daos: ``engine`` (DaosEngine or DaosClient) required; ``contention``
-    is attached to the engine (its stats are the telemetry sink).
+    daos: ``engine`` (DaosEngine or DaosClient) required; a ``contention``
+    model is attached to an engine that has none — an engine that already
+    carries a DIFFERENT model raises instead of being silently rewired.
     """
-    if backend == "posix":
-        from .posix import PosixCatalogue, PosixStore
+    from .config import build_fdb
 
-        if root is None:
-            raise ValueError("posix backend requires root=")
-        return FDB(
-            PosixCatalogue(root, schema, stats=stats, contention=contention),
-            PosixStore(root, stats=stats, contention=contention, **kw),
-        )
+    if backend == "posix" and stats is None:
+        # keep this factory's documented default: config-built tiers get a
+        # fresh per-tier sink, make_fdb keeps the process-global one
+        from .posix import POSIX_STATS
+
+        stats = POSIX_STATS
+    cfg: dict = {"type": "local", "backend": backend, "schema": schema, **kw}
+    if root is not None:
+        cfg["root"] = root
+    if engine is not None:
+        cfg["engine"] = engine
+    if stats is not None:
+        cfg["stats"] = stats
+    if contention is not None:
+        cfg["contention"] = contention
     if backend == "daos":
-        from .daos_backend import DaosCatalogue, DaosStore
-
-        if stats is not None:
-            raise ValueError(
-                "daos backend does not take stats= (engine.stats is the telemetry sink)"
-            )
-        if engine is None:
-            from .daos import DaosEngine
-
-            engine = DaosEngine(contention=contention)
-        elif contention is not None:
-            engine.contention = contention
-        return FDB(
-            DaosCatalogue(engine, schema, pool=pool),
-            DaosStore(engine, pool=pool, **kw),
-        )
-    raise ValueError(f"unknown FDB backend {backend!r}")
+        cfg.setdefault("pool", pool)
+    fdb = build_fdb(cfg)
+    assert isinstance(fdb, FDB)
+    return fdb

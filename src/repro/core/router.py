@@ -38,11 +38,15 @@ __all__ = ["FDBRouter", "make_router"]
 
 
 class FDBRouter(FDBClient):
-    def __init__(self, lanes: Sequence):
+    def __init__(self, lanes: Sequence, *, shared: Sequence[FDBClient] = ()):
+        """``shared``: lanes this router does NOT own — flush/drain still
+        reach them, ``close()`` leaves them open (config builds list
+        prebuilt pass-through subtrees here)."""
         lanes = list(lanes)
         if not lanes:
             raise ValueError("router needs at least one lane")
         self.lanes = lanes
+        self._shared = {id(lane) for lane in shared}
         self.schema: Schema = lanes[0].schema
         for lane in lanes[1:]:
             if lane.schema != self.schema:
@@ -141,11 +145,15 @@ class FDBRouter(FDBClient):
 
     def close(self) -> None:
         # a failing lane must not leave the healthy ones unflushed: close
-        # every lane, then re-raise the first failure
+        # every owned lane (shared ones only flush — the caller closes
+        # them), then re-raise the first failure
         first_err: Exception | None = None
         for lane in self.lanes:
             try:
-                lane.close()
+                if id(lane) in self._shared:
+                    lane.flush()
+                else:
+                    lane.close()
             except Exception as e:  # noqa: BLE001
                 first_err = first_err or e
         if first_err is not None:
@@ -163,7 +171,10 @@ def make_router(
     contention=None,
     **kw,
 ) -> FDBRouter:
-    """Build an N-lane router of homogeneous backends.
+    """Build an N-lane router of homogeneous backends — a thin shim that
+    assembles a ``{"type": "dist", "lanes": [...]}`` config and hands it to
+    :func:`repro.core.config.build_fdb` (use that directly for heterogeneous
+    lane mixes or nested compositions).
 
     posix: lane *i* lives under ``root/lane{i}`` (independent TOCs/streams)
     and gets its OWN :class:`PosixStats` sink, so ``stats_snapshot()`` can
@@ -173,14 +184,14 @@ def make_router(
     A ``contention`` model is shared by every lane — the lanes contend for
     the same emulated servers.
     """
-    from .fdb import make_fdb
+    from .config import build_fdb
 
     if n_lanes < 1:
         raise ValueError("need at least one lane")
     shared_stats = kw.pop("stats", None)  # explicit sink: shared by all lanes
     if shared_stats is not None and backend == "daos":
         raise ValueError("daos router does not take stats= (engine.stats is the telemetry sink)")
-    lanes = []
+    lanes: list[dict] = []
     for i in range(n_lanes):
         if backend == "posix":
             if root is None:
@@ -189,19 +200,26 @@ def make_router(
 
             from .posix import PosixStats
 
-            lanes.append(
-                make_fdb(
-                    "posix", schema=schema, root=os.path.join(root, f"lane{i}"),
-                    stats=shared_stats or PosixStats(name=f"posix-lane{i}"),
-                    contention=contention, **kw,
-                )
-            )
+            lane = {
+                "backend": "posix", "schema": schema,
+                "root": os.path.join(root, f"lane{i}"),
+                "stats": shared_stats or PosixStats(name=f"posix-lane{i}"),
+                **kw,
+            }
+            if contention is not None:
+                lane["contention"] = contention
+            lanes.append(lane)
         elif backend == "daos":
             if engine is None:
                 from .daos import DaosEngine
 
                 engine = DaosEngine(contention=contention)
-            lanes.append(make_fdb("daos", schema=schema, engine=engine, pool=f"{pool}-lane{i}", **kw))
+            lanes.append(
+                {"backend": "daos", "schema": schema, "engine": engine,
+                 "pool": f"{pool}-lane{i}", **kw}
+            )
         else:
             raise ValueError(f"unknown router backend {backend!r}")
-    return FDBRouter(lanes)
+    router = build_fdb({"type": "dist", "lanes": lanes})
+    assert isinstance(router, FDBRouter)
+    return router

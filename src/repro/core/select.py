@@ -1,0 +1,240 @@
+"""SelectFDB — metadata-driven routing across heterogeneous FDB tiers.
+
+ECMWF's operational deployment never runs a single FDB: a ``select``
+composition routes every request by metadata between an operational hot FDB
+on NVM and the cold parallel-filesystem archive (paper §1.3; "DAOS as HPC
+Storage, a view from NWP").  This facade reproduces that: an ordered list of
+``(match, client)`` rules plus an optional default tier, where *match* is any
+MARS-style request fragment (``class=od,stream=oper`` — spans, ranges and
+wildcards all work) and *client* is any :class:`~repro.core.client.FDBClient`
+(a plain FDB, an AsyncFDB, a router, even another SelectFDB).
+
+Routing semantics:
+
+- ``archive``/``retrieve`` route one identifier to the FIRST rule whose
+  match covers it, else to the default tier; an archive that no tier accepts
+  raises (a silently dropped field is operationally worse than an error),
+  while an unroutable retrieve returns None (cache semantics — the key
+  cannot exist anywhere);
+- ``list``/``wipe``/partial ``retrieve_many`` fan out over every tier whose
+  rule COULD intersect the request (plus the default, which can hold
+  anything), and merge the per-tier results — ``ListEntry`` streams
+  concatenate, :class:`~repro.core.client.WipeReport`s aggregate through
+  ``WipeReport.__add__`` (which dedupes dataset names across tiers);
+- tiers may use DIFFERENT schemas (the paper's per-backend keyword
+  placement: ``NWP_SCHEMA_DAOS`` hot, ``NWP_SCHEMA_POSIX`` cold) as long as
+  they agree on the keyword *set* and the dataset keywords — the level split
+  below the dataset is a per-tier layout detail the router never sees.
+
+The shared client surface (reads, MARS retrieval, wipe validation, context
+management) comes from :class:`FDBClient`; this class adds only the tiering.
+Build one declaratively with ``{"type": "select", ...}`` through
+:func:`~repro.core.config.build_fdb`.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Mapping, Sequence
+
+from .catalogue import ListEntry
+from .client import FDBClient, WipeReport
+from .datahandle import DataHandle
+from .keys import Key
+from .request import Request, Span, as_request
+from .schema import Schema
+
+__all__ = ["SelectFDB"]
+
+
+def _spans_intersect(a: Span, b: Span) -> bool:
+    """Could some value satisfy both spans?  Wildcards intersect everything.
+    Enumerable spans are checked against the other side's ``contains`` in
+    BOTH directions: membership can be spelling-sensitive on one side and
+    numeric on the other (``step=06`` meets ``step=0/to/12/by/6`` only via
+    the range's numeric ``contains``, never via its canonical enumeration)."""
+    if a.is_wildcard or b.is_wildcard:
+        return True
+    av, bv = a.values(), b.values()
+    if av is not None and any(b.contains(v) for v in av):
+        return True
+    if bv is not None and any(a.contains(v) for v in bv):
+        return True
+    # an enumerable side whose every value the other side rejects is
+    # conclusively disjoint; two non-enumerable spans cannot be disproven
+    return av is None and bv is None
+
+
+class SelectFDB(FDBClient):
+    def __init__(
+        self,
+        rules: Sequence[tuple],
+        default: FDBClient | None = None,
+        *,
+        shared: Sequence[FDBClient] = (),
+    ):
+        """``rules``: ordered ``(match, client)`` pairs — *match* is a
+        :class:`Request`, MARS text, or mapping; first match wins.
+        ``default``: the tier for identifiers no rule covers (optional —
+        without it, unmatched archives raise).  ``shared``: tiers this
+        facade does NOT own — flush/drain still reach them, ``close()``
+        leaves them open (config builds list prebuilt pass-through
+        subtrees here, so closing the tree never closes a caller's
+        client)."""
+        self._shared = {id(c) for c in shared}
+        self._rules: list[tuple[Request, FDBClient]] = [
+            (as_request(match), client) for match, client in rules
+        ]
+        self._default = default
+        tiers: dict[int, FDBClient] = {}
+        for _, client in self._rules:
+            tiers.setdefault(id(client), client)
+        if default is not None:
+            tiers.setdefault(id(default), default)
+        if not tiers:
+            raise ValueError("SelectFDB needs at least one rule or a default tier")
+        #: distinct tier clients, in rule order (default last)
+        self.tiers: tuple[FDBClient, ...] = tuple(tiers.values())
+        self.schema: Schema = self.tiers[0].schema
+        # tiers may split levels differently (per-backend keyword placement)
+        # but must agree on WHAT the keywords are and which form a dataset —
+        # the select layer validates requests and wipes against one schema
+        for t in self.tiers[1:]:
+            if set(t.schema.all_keys) != set(self.schema.all_keys) or tuple(
+                t.schema.dataset_keys
+            ) != tuple(self.schema.dataset_keys):
+                raise ValueError(
+                    f"select tiers must agree on keywords and dataset keys: "
+                    f"schema {t.schema.name!r} is incompatible with {self.schema.name!r}"
+                )
+        # a rule naming keywords outside the schema could never match a valid
+        # identifier — that is a dead tier, i.e. a config typo: fail now
+        for match, _ in self._rules:
+            self.schema.request_levels(match)
+
+    # ------------------------------------------------------------------ routing
+    def route(self, key: Key | Mapping[str, str]) -> FDBClient | None:
+        """The tier that owns *key*: first matching rule, else the default,
+        else None."""
+        key = self._as_key(key)
+        for match, client in self._rules:
+            if match.matches(key):
+                return client
+        return self._default
+
+    def _route_or_raise(self, key: Key | Mapping[str, str]) -> FDBClient:
+        client = self.route(key)
+        if client is None:
+            raise ValueError(
+                f"no select rule matches identifier {dict(self._as_key(key))!r} "
+                "and no default tier is configured"
+            )
+        return client
+
+    def _matching_tiers(self, request: Request) -> list[FDBClient]:
+        """Distinct tiers a request fans out to: every tier with a rule that
+        could intersect it, plus the default (which can hold anything a rule
+        declined), in rule order."""
+        out: dict[int, FDBClient] = {}
+        for match, client in self._rules:
+            if all(
+                kw not in request or _spans_intersect(span, request[kw])
+                for kw, span in match.items()
+            ):
+                out.setdefault(id(client), client)
+        if self._default is not None:
+            out.setdefault(id(self._default), self._default)
+        return list(out.values())
+
+    # --------------------------------------------------------------------- write
+    def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
+        self._route_or_raise(key).archive(key, data)
+
+    def archive_batch(self, items: Sequence[tuple[Key | Mapping[str, str], bytes]]) -> None:
+        groups: dict[int, tuple[FDBClient, list]] = {}
+        for key, data in items:
+            client = self._route_or_raise(key)
+            groups.setdefault(id(client), (client, []))[1].append((key, data))
+        for client, group in groups.values():
+            client.archive_batch(group)
+
+    def flush(self) -> None:
+        for tier in self.tiers:
+            tier.flush()
+
+    def drain(self) -> None:
+        # forward the write barrier — an AsyncFDB tier would otherwise skip it
+        for tier in self.tiers:
+            tier.drain()
+
+    # ---------------------------------------------------------------------- read
+    def retrieve(self, key: Key | Mapping[str, str]) -> DataHandle | None:
+        client = self.route(key)
+        return None if client is None else client.retrieve(key)
+
+    def retrieve_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[DataHandle | None]:
+        groups: dict[int, tuple[FDBClient, list[int]]] = {}
+        out: list[DataHandle | None] = [None] * len(keys)
+        for i, key in enumerate(keys):
+            client = self.route(key)
+            if client is not None:
+                groups.setdefault(id(client), (client, []))[1].append(i)
+        for client, idxs in groups.values():
+            results = client.retrieve_batch([keys[i] for i in idxs])
+            for i, r in zip(idxs, results):
+                out[i] = r
+        return out
+
+    def _list(self, request: Request) -> Iterator[ListEntry]:
+        """Merged listing across every tier the request could touch.  Tiers
+        hold disjoint identifiers (each key routes to exactly one tier), so
+        concatenation IS the merge."""
+        for tier in self._matching_tiers(request):
+            yield from getattr(tier, "_list", tier.list)(request)
+
+    # ---------------------------------------------------------------------- wipe
+    def _wipe_dataset(self, dataset_key: Key, entries=None) -> WipeReport:
+        """Fan one dataset wipe out across the tiers that could hold any of
+        its fields and aggregate the reports (``WipeReport.__add__`` dedupes
+        the dataset names).  The caller's merged ``entries`` span tiers, so
+        each tier resolves its own listing (``entries=None``) — a tier must
+        only count what IT removed."""
+        del entries
+        ds_req = as_request(dataset_key)
+        report = WipeReport()
+        for tier in self._matching_tiers(ds_req):
+            report = report + tier._wipe_dataset(dataset_key, None)
+        return report
+
+    # ------------------------------------------------------------------ telemetry
+    def io_stats(self) -> list:
+        """Distinct stats instances across all tiers (shared sinks — e.g.
+        one DAOS engine behind two tiers — are deduplicated, so a merged
+        snapshot never double-counts)."""
+        seen: dict[int, object] = {}
+        for tier in self.tiers:
+            for s in tier.io_stats():
+                seen.setdefault(id(s), s)
+        return list(seen.values())
+
+    def stats_snapshot(self) -> dict:
+        """Merged telemetry plus the per-tier breakdown."""
+        snap = super().stats_snapshot()
+        snap["tiers"] = [tier.stats_snapshot() for tier in self.tiers]
+        return snap
+
+    # ------------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        # a failing tier must not leave the others unflushed: close every
+        # owned tier (shared ones only flush — the caller closes them),
+        # then re-raise the first failure
+        first_err: Exception | None = None
+        for tier in self.tiers:
+            try:
+                if id(tier) in self._shared:
+                    tier.flush()
+                else:
+                    tier.close()
+            except Exception as e:  # noqa: BLE001
+                first_err = first_err or e
+        if first_err is not None:
+            raise first_err

@@ -1,0 +1,516 @@
+"""Declarative FDBConfig tests: grammar, JSON round-trip, backend registry,
+factory shims, and config-driven construction end to end."""
+
+import json
+import os
+import sys
+
+import pytest
+
+from repro.core import (
+    AsyncFDB,
+    Catalogue,
+    ConfigError,
+    FDB,
+    FDBConfig,
+    FDBRouter,
+    Key,
+    ListEntry,
+    MemoryDataHandle,
+    NWP_SCHEMA_DAOS,
+    NWP_SCHEMA_POSIX,
+    Request,
+    Schema,
+    SelectFDB,
+    Store,
+    WipeReport,
+    build_fdb,
+    make_fdb,
+    make_router,
+    register_backend,
+    register_schema,
+    registered_backends,
+)
+from repro.core.config import schema_from_config, schema_to_config
+from repro.core.daos import DaosEngine
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+
+def ident(cls="od", num="0", step="0", param="2t") -> Key:
+    return Key(
+        {"class": cls, "stream": "oper", "expver": "0001", "date": "20240603",
+         "time": "1200", "type": "ef", "levtype": "sfc", "number": num,
+         "levelist": "0", "step": step, "param": param}
+    )
+
+
+def roundtrip(fdb) -> None:
+    """Archive/flush/read through any built client."""
+    fdb.archive(ident(), b"cfg-bytes")
+    fdb.flush()
+    assert fdb.read(ident()) == b"cfg-bytes"
+
+
+class TestBuildShapes:
+    """build_fdb round-trips every documented config shape."""
+
+    def test_local_posix(self, tmp_path):
+        with build_fdb({"type": "local", "backend": "posix", "schema": "nwp-posix",
+                        "root": str(tmp_path / "f")}) as fdb:
+            assert isinstance(fdb, FDB)
+            assert fdb.schema == NWP_SCHEMA_POSIX
+            roundtrip(fdb)
+
+    def test_local_daos_and_backend_shorthand(self):
+        with build_fdb({"backend": "daos"}) as fdb:  # type omitted, schema default
+            assert isinstance(fdb, FDB)
+            assert fdb.schema == NWP_SCHEMA_DAOS
+            roundtrip(fdb)
+
+    def test_local_schema_default_per_backend(self, tmp_path):
+        with build_fdb({"backend": "posix", "root": str(tmp_path / "f")}) as fdb:
+            assert fdb.schema == NWP_SCHEMA_POSIX
+
+    def test_select(self, tmp_path):
+        with build_fdb({
+            "type": "select",
+            "rules": [{"match": "class=od", "fdb": {"backend": "daos"}}],
+            "default": {"backend": "posix", "root": str(tmp_path / "cold")},
+        }) as fdb:
+            assert isinstance(fdb, SelectFDB)
+            roundtrip(fdb)
+
+    def test_dist_lanes(self, tmp_path):
+        with build_fdb({"type": "dist", "lanes": [
+            {"backend": "posix", "schema": "nwp-daos", "root": str(tmp_path / "l0")},
+            {"backend": "posix", "schema": "nwp-daos", "root": str(tmp_path / "l1")},
+        ]}) as fdb:
+            assert isinstance(fdb, FDBRouter) and len(fdb.lanes) == 2
+            roundtrip(fdb)
+
+    def test_dist_template_substitutes_lane(self, tmp_path):
+        with build_fdb({"type": "dist", "n_lanes": 3,
+                        "template": {"backend": "posix",
+                                     "root": str(tmp_path / "lane{lane}")}}) as fdb:
+            assert len(fdb.lanes) == 3
+            roundtrip(fdb)
+        assert sorted(d for d in os.listdir(tmp_path) if d.startswith("lane")) == [
+            "lane0", "lane1", "lane2"]
+
+    def test_async(self, tmp_path):
+        with build_fdb({"type": "async", "inner": {"backend": "posix",
+                                                   "root": str(tmp_path / "f")},
+                        "writers": 2, "batch_size": 8}) as fdb:
+            assert isinstance(fdb, AsyncFDB)
+            roundtrip(fdb)
+
+    def test_nested_async_select_dist(self, tmp_path):
+        cfg = {
+            "type": "async",
+            "writers": 1,
+            "inner": {
+                "type": "select",
+                "rules": [{"match": "class=od", "fdb": {
+                    "type": "dist", "n_lanes": 2,
+                    "template": {"backend": "posix", "schema": "nwp-daos",
+                                 "root": str(tmp_path / "hot{lane}")}}}],
+                "default": {"backend": "posix", "root": str(tmp_path / "cold")},
+            },
+        }
+        with build_fdb(cfg) as fdb:
+            assert isinstance(fdb, AsyncFDB)
+            assert isinstance(fdb.fdb, SelectFDB)
+            fdb.archive(ident(cls="od"), b"hot")
+            fdb.archive(ident(cls="rd"), b"cold")
+            fdb.flush()
+            assert fdb.read(ident(cls="od")) == b"hot"
+            assert fdb.read(ident(cls="rd")) == b"cold"
+
+    def test_prebuilt_client_passes_through(self, tmp_path):
+        inner = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "f"))
+        fdb = build_fdb({"type": "async", "inner": inner, "owns_inner": False})
+        assert fdb.fdb is inner
+        fdb.close()
+        inner.archive(ident(), b"still-open")  # not closed by the wrapper
+        inner.close()
+
+    def test_async_close_cascades_to_built_tree(self, tmp_path):
+        fdb = build_fdb({"type": "async", "inner": {"backend": "posix",
+                                                    "root": str(tmp_path / "f")}})
+        inner = fdb.fdb
+        roundtrip(fdb)
+        fdb.close()
+        # the owned inner FDB was closed too: its store file handles are gone
+        assert not inner.store._files
+
+
+class TestConfigErrors:
+    def test_unknown_type(self):
+        with pytest.raises(ConfigError, match="unknown FDB config type"):
+            build_fdb({"type": "tiered"})
+
+    def test_unknown_backend(self):
+        with pytest.raises(ConfigError, match="unknown FDB backend"):
+            build_fdb({"backend": "tape"})
+
+    def test_posix_needs_root(self):
+        with pytest.raises(ConfigError, match="requires root"):
+            build_fdb({"backend": "posix"})
+
+    def test_daos_rejects_stats(self):
+        with pytest.raises(ConfigError, match="does not take stats"):
+            build_fdb({"backend": "daos", "stats": object()})
+
+    def test_select_needs_rules_or_default(self):
+        with pytest.raises(ConfigError, match="rules"):
+            build_fdb({"type": "select"})
+
+    def test_select_rule_shape(self):
+        with pytest.raises(ConfigError, match="'match' and 'fdb'"):
+            build_fdb({"type": "select", "rules": [{"match": "class=od"}]})
+
+    def test_dist_needs_lanes_or_template(self):
+        with pytest.raises(ConfigError, match="lanes"):
+            build_fdb({"type": "dist"})
+
+    def test_async_needs_inner(self):
+        with pytest.raises(ConfigError, match="inner"):
+            build_fdb({"type": "async"})
+
+    def test_unknown_schema_name(self):
+        with pytest.raises(ConfigError, match="unknown schema"):
+            build_fdb({"backend": "daos", "schema": "no-such-schema"})
+
+    def test_validation_is_recursive_and_eager(self):
+        with pytest.raises(ConfigError):
+            FDBConfig({"type": "async", "inner": {"type": "select"}})
+
+
+class TestJsonRoundTrip:
+    def test_nested_roundtrip(self, tmp_path):
+        cfg = FDBConfig({
+            "type": "select",
+            "rules": [{"match": "class=od,stream=oper",
+                       "fdb": {"backend": "daos", "schema": "nwp-daos"}}],
+            "default": {"type": "dist", "n_lanes": 2,
+                        "template": {"backend": "posix", "schema": "nwp-posix",
+                                     "root": str(tmp_path / "l{lane}")}},
+        })
+        again = FDBConfig.from_json(cfg.to_json(indent=2))
+        assert again == cfg
+        assert json.loads(cfg.to_json()) == cfg.to_dict()
+
+    def test_schema_instances_serialise_by_name(self, tmp_path):
+        cfg = FDBConfig({"backend": "posix", "schema": NWP_SCHEMA_POSIX,
+                         "root": str(tmp_path / "f")})
+        assert cfg.to_dict()["schema"] == "nwp-posix"
+        assert FDBConfig.from_json(cfg.to_json()).build().schema == NWP_SCHEMA_POSIX
+
+    def test_custom_schema_serialises_inline(self):
+        custom = Schema(name="tiny", dataset_keys=("a",), collocation_keys=("b",),
+                        element_keys=("c",), values={"a": frozenset({"1", "2"})})
+        spec = schema_to_config(custom)
+        assert spec["name"] == "tiny" and spec["values"]["a"] == ["1", "2"]
+        assert schema_from_config(spec) == custom
+
+    def test_live_objects_rejected(self):
+        cfg = FDBConfig({"backend": "daos", "engine": DaosEngine()})
+        with pytest.raises(ConfigError, match="not JSON-serialisable"):
+            cfg.to_json()
+
+    def test_from_file(self, tmp_path):
+        path = tmp_path / "fdb.json"
+        path.write_text(json.dumps({"backend": "posix", "schema": "nwp-posix",
+                                    "root": str(tmp_path / "f")}))
+        with FDBConfig.from_file(str(path)).build() as fdb:
+            roundtrip(fdb)
+
+    def test_isolated_from_source_mutation(self, tmp_path):
+        src = {"type": "select", "rules": [
+            {"match": "class=od",
+             "fdb": {"backend": "posix", "root": str(tmp_path / "a")}}]}
+        cfg = FDBConfig(src)
+        src["rules"].clear()  # caller mutates the shared nested list
+        with pytest.raises(ConfigError):
+            FDBConfig(src)    # the source is now invalid...
+        with cfg.build() as fdb:  # ...but the validated copy still builds
+            roundtrip(fdb)
+
+    def test_malformed_json(self):
+        with pytest.raises(ConfigError, match="malformed config JSON"):
+            FDBConfig.from_json("{nope")
+
+
+# ---------------------------------------------------------------------------
+# Pluggable backend registry
+# ---------------------------------------------------------------------------
+
+class MemStore(Store):
+    scheme = "mem"
+
+    def __init__(self, fail_archive: bool = False):
+        self.blobs: dict[str, bytes] = {}
+        self.fail_archive = fail_archive
+        self._n = 0
+
+    def archive(self, data, dataset_key, collocation_key):
+        if self.fail_archive:
+            raise IOError("injected store fault")
+        from repro.core import FieldLocation
+
+        self._n += 1
+        uri = f"blob{self._n}"
+        self.blobs[uri] = bytes(data)
+        return FieldLocation("mem", uri, 0, len(data))
+
+    def flush(self):
+        pass
+
+    def retrieve(self, location):
+        return MemoryDataHandle(self.blobs[location.uri])
+
+    def wipe(self, dataset_key):
+        return None
+
+
+class MemCatalogue(Catalogue):
+    def __init__(self, schema):
+        super().__init__(schema)
+        self.entries: dict[Key, object] = {}
+
+    def archive(self, dataset_key, collocation_key, element_key, location):
+        from repro.core import key_union
+
+        self.entries[key_union(dataset_key, collocation_key, element_key)] = location
+
+    def flush(self):
+        pass
+
+    def retrieve(self, dataset_key, collocation_key, element_key):
+        from repro.core import key_union
+
+        return self.entries.get(key_union(dataset_key, collocation_key, element_key))
+
+    def list(self, request):
+        req = Request(request) if not isinstance(request, Request) else request
+        for k, loc in self.entries.items():
+            if k.matches(req):
+                yield ListEntry(k, loc)
+
+    def wipe(self, dataset_key):
+        self.entries = {k: v for k, v in self.entries.items()
+                        if not k.matches(dataset_key)}
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _register_mem_backend():
+    if "mem" not in registered_backends():
+        register_backend(
+            "mem",
+            lambda schema, params: MemCatalogue(schema),
+            lambda schema, params: MemStore(fail_archive=params.get("fail_archive", False)),
+            default_schema=NWP_SCHEMA_DAOS,
+        )
+
+
+class TestBackendRegistry:
+    def test_registered_backend_builds_from_config(self):
+        with build_fdb({"backend": "mem"}) as fdb:
+            roundtrip(fdb)
+            assert len(list(fdb.list({}))) == 1
+
+    def test_select_routes_to_registered_backend(self, tmp_path):
+        with build_fdb({
+            "type": "select",
+            "rules": [{"match": "class=od", "fdb": {"backend": "mem"}}],
+            "default": {"backend": "posix", "root": str(tmp_path / "cold")},
+        }) as fdb:
+            fdb.archive(ident(cls="od"), b"in-memory")
+            fdb.flush()
+            hot = fdb.tiers[0]
+            assert isinstance(hot.store, MemStore)
+            assert hot.store.blobs  # landed in the test backend, not posix
+
+    def test_fault_injecting_backend(self):
+        fdb = build_fdb({"backend": "mem", "fail_archive": True})
+        with pytest.raises(IOError, match="injected store fault"):
+            fdb.archive(ident(), b"x")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ConfigError, match="already registered"):
+            register_backend("mem", lambda s, p: None, lambda s, p: None)
+
+    def test_register_schema_conflict(self):
+        other = Schema(name="nwp-daos", dataset_keys=("x",),
+                       collocation_keys=("y",), element_keys=("z",))
+        with pytest.raises(ConfigError, match="already registered"):
+            register_schema(other)
+        register_schema(NWP_SCHEMA_DAOS)  # same definition: idempotent
+
+    def test_partial_build_failure_closes_built_subtrees(self):
+        closed: list = []
+
+        class TrackingStore(MemStore):
+            def close(self):
+                closed.append(self)
+
+        register_backend(
+            "tracked", lambda s, p: MemCatalogue(s), lambda s, p: TrackingStore(),
+            default_schema=NWP_SCHEMA_DAOS, overwrite=True,
+        )
+        with pytest.raises(ConfigError, match="unknown FDB backend"):
+            build_fdb({"type": "select", "rules": [
+                {"match": "class=od", "fdb": {"backend": "tracked"}},
+                {"match": "class=rd", "fdb": {"backend": "no-such-backend"}},
+            ]})
+        assert len(closed) == 1  # the already-built hot tier was released
+
+        closed.clear()
+        prebuilt = build_fdb({"backend": "tracked"})
+        with pytest.raises(ConfigError, match="unknown FDB backend"):
+            build_fdb({"type": "dist",
+                       "lanes": [prebuilt, {"backend": "no-such-backend"}]})
+        assert closed == []  # caller-owned pass-through subtree stays open
+        prebuilt.close()
+        assert len(closed) == 1
+
+    def test_close_leaves_prebuilt_subtrees_open(self):
+        closed: list = []
+
+        class TrackingStore(MemStore):
+            def close(self):
+                closed.append(self)
+
+        register_backend(
+            "tracked", lambda s, p: MemCatalogue(s), lambda s, p: TrackingStore(),
+            default_schema=NWP_SCHEMA_DAOS, overwrite=True,
+        )
+        shared = build_fdb({"backend": "tracked"})
+        for composite in (
+            {"type": "select",
+             "rules": [{"match": "class=od", "fdb": {"backend": "mem"}}],
+             "default": shared},
+            {"type": "dist", "lanes": [shared]},
+            {"type": "async", "inner": shared},
+        ):
+            build_fdb(composite).close()
+            assert closed == []  # the caller's client survived every close
+            roundtrip(shared)    # and is still fully usable
+        shared.close()
+        assert len(closed) == 1
+
+
+# ---------------------------------------------------------------------------
+# Factory shims + engine/contention conflict (satellites)
+# ---------------------------------------------------------------------------
+
+class TestShims:
+    def test_make_fdb_is_config_shim(self, tmp_path):
+        fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "f"))
+        assert isinstance(fdb, FDB)
+        roundtrip(fdb)
+        with pytest.raises(ValueError):
+            make_fdb("tape", schema=NWP_SCHEMA_POSIX)
+
+    def test_make_fdb_posix_keeps_global_sink(self, tmp_path):
+        # the shim's documented default is the process-global POSIX_STATS;
+        # config-built tiers get fresh per-tier sinks instead
+        from repro.core.posix.stats import POSIX_STATS
+
+        fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "g"))
+        assert any(s is POSIX_STATS for s in fdb.io_stats())
+        built = build_fdb({"backend": "posix", "root": str(tmp_path / "h")})
+        assert all(s is not POSIX_STATS for s in built.io_stats())
+
+    def test_make_router_is_config_shim(self, tmp_path):
+        router = make_router("posix", 2, schema=NWP_SCHEMA_DAOS, root=str(tmp_path))
+        assert isinstance(router, FDBRouter) and len(router.lanes) == 2
+        roundtrip(router)
+        assert os.path.isdir(tmp_path / "lane0") and os.path.isdir(tmp_path / "lane1")
+        router.close()
+
+    def test_daos_contention_conflict_raises(self):
+        from repro.metrics import make_contention
+
+        model_a = make_contention("daos")
+        model_b = make_contention("daos")
+        engine = DaosEngine(contention=model_a)
+        with pytest.raises(ValueError, match="conflicting contention models"):
+            make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=engine, contention=model_b)
+        # the caller-owned engine was NOT silently rewired
+        assert engine.contention is model_a
+
+    def test_daos_contention_attaches_when_engine_has_none(self):
+        from repro.metrics import make_contention
+
+        model = make_contention("daos")
+        engine = DaosEngine()
+        fdb = make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=engine, contention=model)
+        assert engine.contention is model
+        # passing the SAME model again is a no-op, not a conflict
+        make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=engine, contention=model)
+        fdb.close()
+
+
+class TestWipeReportMerge:
+    def test_add_dedupes_dataset_names(self):
+        a = WipeReport(2, 100, ("ds1", "ds2"))
+        b = WipeReport(3, 50, ("ds2", "ds3"))
+        merged = a + b
+        assert merged == WipeReport(5, 150, ("ds1", "ds2", "ds3"))
+
+    def test_merged_classmethod(self):
+        reports = [WipeReport(1, 10, ("d",)), WipeReport(1, 10, ("d",)),
+                   WipeReport(0, 0, ())]
+        assert WipeReport.merged(reports) == WipeReport(2, 20, ("d",))
+
+
+# ---------------------------------------------------------------------------
+# Config-driven wiring: checkpoint manager + fdb_hammer
+# ---------------------------------------------------------------------------
+
+class TestConfigWiring:
+    def test_checkpoint_manager_from_config(self, tmp_path):
+        import numpy as np
+
+        from repro.checkpoint import CheckpointManager
+
+        cfg = {"backend": "posix", "schema": "checkpoint",
+               "root": str(tmp_path / "ckpt")}
+        state = {"w": np.arange(8, dtype=np.float32)}
+        with CheckpointManager(cfg, run="cfg-run", async_mode=False) as mgr:
+            owned = mgr.fdb
+            mgr.save(0, state)
+            step, restored = mgr.restore(state)
+            assert step == 0
+            np.testing.assert_array_equal(restored["w"], state["w"])
+        assert not owned.store._files  # manager closed the config-built tree
+
+    def test_hammer_config_mode_tiered(self):
+        from fdb_hammer import HammerSpec, TIERED_CONFIG, load_config, run_config
+
+        spec = HammerSpec(n_procs=2, n_steps=2, n_params=2, n_levels=2,
+                          field_size=1 << 10)
+        rows = run_config(load_config("tiered"), spec, io_modes=("sync",))
+        assert len(rows) == 1
+        row = rows[0]
+        assert row["n_parts"] == 2  # hot + cold tier both reported
+        assert row["listed_step0"] == spec.n_procs * 2 * 2
+        assert all(b > 0 for b in row["part_bytes_written"])  # both tiers hit
+        assert row["write_GiBps"] > 0 and row["read_GiBps"] > 0
+        # the built-in config stays JSON-pure (the CI smoke depends on it)
+        assert load_config(json.dumps(TIERED_CONFIG)) == TIERED_CONFIG
+
+    def test_hammer_fills_dist_template_roots_per_lane(self):
+        # a posix dist template with no root must get a {lane} placeholder:
+        # one shared directory would make every lane see every other lane's
+        # datasets and the fanned-out listing would double-count
+        from fdb_hammer import HammerSpec, run_config
+
+        spec = HammerSpec(n_procs=2, n_steps=2, n_params=2, n_levels=1,
+                          field_size=1 << 10)
+        cfg = {"type": "dist", "n_lanes": 2, "template": {"backend": "posix"}}
+        rows = run_config(cfg, spec, io_modes=("sync",))
+        assert rows[0]["n_parts"] == 2
+        assert rows[0]["listed_step0"] == spec.n_procs * 2  # no duplicates

@@ -1,0 +1,284 @@
+"""SelectFDB tiered-routing tests — the paper's hot/cold deployment.
+
+The routing-equivalence property: a single-rule SelectFDB over one backend
+must be observationally identical to the bare backend for every client
+operation; a two-tier hot/cold config must split traffic by metadata, fan
+list/wipe out across tiers, and report per-tier telemetry without double
+counting shared stats sinks.
+"""
+
+import pytest
+
+from repro.core import (
+    Key,
+    NWP_SCHEMA_DAOS,
+    NWP_SCHEMA_POSIX,
+    Request,
+    SelectFDB,
+    build_fdb,
+    make_fdb,
+)
+from repro.core.daos import DaosEngine
+from repro.core.posix import PosixStats
+
+
+def ident(cls="od", num="0", step="0", param="2t", levtype="sfc") -> Key:
+    return Key(
+        {"class": cls, "stream": "oper", "expver": "0001", "date": "20240603",
+         "time": "1200", "type": "ef", "levtype": levtype, "number": num,
+         "levelist": "0", "step": step, "param": param}
+    )
+
+
+def dataset_req(cls="od") -> dict:
+    return {"class": cls, "stream": "oper", "expver": "0001",
+            "date": "20240603", "time": "1200"}
+
+
+def make_bare(backend: str, tmp_path, tag: str = "a"):
+    if backend == "daos":
+        return make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=DaosEngine())
+    return make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / tag),
+                    stats=PosixStats(name=f"posix-{tag}"))
+
+
+def populate(fdb) -> list[Key]:
+    keys = [ident(num=str(m), step=str(s), param=p)
+            for m in range(2) for s in range(3) for p in ("2t", "10u")]
+    for i, k in enumerate(keys):
+        fdb.archive(k, f"payload-{i}".encode())
+    fdb.flush()
+    return keys
+
+
+@pytest.mark.parametrize("backend", ["posix", "daos"])
+class TestRoutingEquivalence:
+    """Single-rule SelectFDB ≡ bare backend, operation for operation."""
+
+    def _pair(self, backend, tmp_path):
+        bare = make_bare(backend, tmp_path, "bare")
+        routed = SelectFDB(
+            [("class=od", make_bare(backend, tmp_path, "routed"))]
+        )
+        return bare, routed
+
+    def test_archive_retrieve_read(self, backend, tmp_path):
+        bare, routed = self._pair(backend, tmp_path)
+        keys = populate(bare)
+        keys2 = populate(routed)
+        assert keys == keys2
+        for k in keys:
+            assert bare.read(k) == routed.read(k)
+        assert routed.read(ident(param="zz")) is None
+        assert bare.retrieve(ident(param="zz")) is None
+
+    def test_retrieve_many_full_and_partial(self, backend, tmp_path):
+        bare, routed = self._pair(backend, tmp_path)
+        populate(bare)
+        populate(routed)
+        for req in (
+            Request.parse("step=0/1,param=2t/10u,number=0/1,class=od,stream=oper,"
+                          "expver=0001,date=20240603,time=1200,type=ef,levtype=sfc,levelist=0"),
+            Request.parse("step=0/to/2,param=*"),
+            Request.parse("param=2t"),
+        ):
+            a = bare.retrieve_many(req).read_all()
+            b = routed.retrieve_many(req).read_all()
+            assert a == b
+
+    def test_list(self, backend, tmp_path):
+        bare, routed = self._pair(backend, tmp_path)
+        populate(bare)
+        populate(routed)
+        for req in ({}, {"step": "1"}, {"param": ["2t"], "number": "0/1"}):
+            a = sorted(e.key.stringify() for e in bare.list(req))
+            b = sorted(e.key.stringify() for e in routed.list(req))
+            assert a == b
+
+    def test_wipe(self, backend, tmp_path):
+        bare, routed = self._pair(backend, tmp_path)
+        populate(bare)
+        populate(routed)
+        ra = bare.wipe(dataset_req())
+        rb = routed.wipe(dataset_req())
+        assert ra == rb
+        assert rb.entries_removed == 12 and rb.datasets == ("od:oper:0001:20240603:1200",)
+        assert list(routed.list({})) == []
+
+    def test_batch_paths(self, backend, tmp_path):
+        bare, routed = self._pair(backend, tmp_path)
+        items = [(ident(step=str(s), param=p), f"{s}{p}".encode())
+                 for s in range(3) for p in ("2t", "10u")]
+        bare.archive_batch(items)
+        routed.archive_batch(items)
+        bare.flush()
+        routed.flush()
+        keys = [k for k, _ in items] + [ident(param="zz")]
+        assert bare.read_batch(keys) == routed.read_batch(keys)
+
+    def test_context_manager(self, backend, tmp_path):
+        with SelectFDB([("class=od", make_bare(backend, tmp_path, "cm"))]) as fdb:
+            fdb.archive(ident(), b"x")
+        # close() flushed: a fresh handle over the same storage sees it
+        if backend == "posix":
+            reread = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "cm"))
+            assert reread.read(ident()) == b"x"
+
+
+class TestTieredHotCold:
+    """Two-tier select: operational stream hot (DAOS), archive cold (POSIX),
+    per-tier schemas with the paper's per-backend keyword placement."""
+
+    def _tiered(self, tmp_path):
+        return build_fdb({
+            "type": "select",
+            "rules": [{"match": "class=od,stream=oper",
+                       "fdb": {"backend": "daos", "schema": "nwp-daos"}}],
+            "default": {"backend": "posix", "schema": "nwp-posix",
+                        "root": str(tmp_path / "cold"),
+                        "stats": PosixStats(name="cold")},
+        })
+
+    def test_traffic_splits_by_metadata(self, tmp_path):
+        fdb = self._tiered(tmp_path)
+        hot, cold = fdb.tiers
+        fdb.archive(ident(cls="od"), b"hot-bytes")
+        fdb.archive(ident(cls="rd"), b"cold-bytes")
+        fdb.flush()
+        assert fdb.read(ident(cls="od")) == b"hot-bytes"
+        assert fdb.read(ident(cls="rd")) == b"cold-bytes"
+        # each tier holds ONLY its slice
+        assert [e.key["class"] for e in hot.list({})] == ["od"]
+        assert [e.key["class"] for e in cold.list({})] == ["rd"]
+        # and the tiers run different level splits (paper §5.1)
+        assert hot.schema.name == "nwp-daos" and cold.schema.name == "nwp-posix"
+
+    def test_merged_list_and_pruned_fanout(self, tmp_path):
+        fdb = self._tiered(tmp_path)
+        fdb.archive(ident(cls="od"), b"h")
+        fdb.archive(ident(cls="rd"), b"c")
+        fdb.flush()
+        assert {e.key["class"] for e in fdb.list({"param": "2t"})} == {"od", "rd"}
+        # a request that CANNOT intersect the hot rule skips the hot tier
+        hot, _ = fdb.tiers
+        ops_before = sum(hot.io_stats()[0].snapshot()["ops"].values())
+        assert [e.key["class"] for e in fdb.list({"class": "rd"})] == ["rd"]
+        assert sum(hot.io_stats()[0].snapshot()["ops"].values()) == ops_before
+
+    def test_per_tier_stats_no_double_count(self, tmp_path):
+        fdb = self._tiered(tmp_path)
+        fdb.archive(ident(cls="od"), b"x" * 1000)
+        fdb.archive(ident(cls="rd"), b"y" * 500)
+        fdb.flush()
+        sinks = fdb.io_stats()
+        assert len(sinks) == len({id(s) for s in sinks})  # distinct instances
+        snap = fdb.stats_snapshot()
+        assert len(snap["tiers"]) == 2
+        # merged bytes == sum over distinct sinks (no sink counted twice)
+        assert snap["bytes_written"] == sum(
+            s.snapshot()["bytes_written"] for s in sinks)
+        assert snap["bytes_written"] >= 1500
+
+    def test_wipe_fans_out_and_dedupes_dataset_names(self, tmp_path):
+        # rules on a COLLOCATION keyword: one dataset's fields split across
+        # tiers, so a dataset wipe must hit both and report the dataset once
+        fdb = build_fdb({
+            "type": "select",
+            "rules": [{"match": "levtype=sfc",
+                       "fdb": {"backend": "daos", "schema": "nwp-daos"}}],
+            "default": {"backend": "posix", "schema": "nwp-posix",
+                        "root": str(tmp_path / "cold")},
+        })
+        fdb.archive(ident(levtype="sfc"), b"hot")
+        fdb.archive(ident(levtype="ml", param="10u"), b"cold")
+        fdb.flush()
+        report = fdb.wipe(dataset_req())
+        assert report.entries_removed == 2
+        assert report.datasets == ("od:oper:0001:20240603:1200",)  # deduped
+        assert list(fdb.list({})) == []
+
+    def test_unroutable_archive_raises_retrieve_none(self, tmp_path):
+        fdb = build_fdb({
+            "type": "select",
+            "rules": [{"match": "class=od",
+                       "fdb": {"backend": "posix", "root": str(tmp_path / "a")}}],
+        })
+        with pytest.raises(ValueError, match="no select rule"):
+            fdb.archive(ident(cls="rd"), b"x")
+        assert fdb.retrieve(ident(cls="rd")) is None
+        assert fdb.read(ident(cls="rd")) is None
+
+    def test_first_match_wins(self, tmp_path):
+        a = make_bare("posix", tmp_path, "a")
+        b = make_bare("posix", tmp_path, "b")
+        fdb = SelectFDB([("class=od", a), ("class=od/rd", b)])
+        fdb.archive(ident(cls="od"), b"first")
+        fdb.archive(ident(cls="rd"), b"second")
+        fdb.flush()
+        assert a.read(ident(cls="od")) == b"first"
+        assert b.read(ident(cls="od")) is None
+        assert b.read(ident(cls="rd")) == b"second"
+
+    def test_incompatible_tier_schemas_rejected(self, tmp_path):
+        from repro.core import CHECKPOINT_SCHEMA
+
+        nwp = make_bare("posix", tmp_path, "n")
+        ckpt = make_fdb("posix", schema=CHECKPOINT_SCHEMA, root=str(tmp_path / "c"))
+        with pytest.raises(ValueError, match="must agree"):
+            SelectFDB([("class=od", nwp)], default=ckpt)
+
+    def test_rule_with_unknown_keyword_rejected(self, tmp_path):
+        from repro.core import UnknownKeywordError
+
+        with pytest.raises(UnknownKeywordError):
+            SelectFDB([("flavour=hot", make_bare("posix", tmp_path))])
+
+    def test_no_tiers_rejected(self):
+        with pytest.raises(ValueError, match="at least one"):
+            SelectFDB([])
+
+    def test_shared_engine_stats_deduped(self, tmp_path):
+        # two hot tiers over ONE engine: io_stats must dedupe the shared sink
+        eng = DaosEngine()
+        fdb = SelectFDB(
+            [("class=od", make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=eng, pool="hot")),
+             ("class=rd", make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=eng, pool="warm"))],
+        )
+        fdb.archive(ident(cls="od"), b"x" * 100)
+        fdb.archive(ident(cls="rd"), b"y" * 100)
+        fdb.flush()
+        assert len(fdb.io_stats()) == 1
+        assert fdb.stats_snapshot()["bytes_written"] == eng.stats.snapshot()["bytes_written"]
+
+    def test_range_rule_fans_out_to_padded_spelling(self, tmp_path):
+        # route() matches 'step=06' against the range numerically, so the
+        # field lives in the hot tier; list/retrieve_many fan-out must reach
+        # it through the same numeric intersection, not only by comparing
+        # the range's canonical enumeration ('0','6','12') as strings
+        fdb = SelectFDB(
+            [("step=0/to/12/by/6", make_bare("posix", tmp_path, "hot"))],
+            default=make_bare("posix", tmp_path, "cold"),
+        )
+        k = ident(step="06")
+        fdb.archive(k, b"padded")
+        fdb.flush()
+        assert fdb.route(k) is fdb.tiers[0]
+        assert [e.key for e in fdb.list({"step": "06"})] == [k]
+        assert list(fdb.retrieve_many({"step": "06"}).read_all().values()) == [b"padded"]
+
+    def test_config_posix_tiers_get_distinct_default_sinks(self, tmp_path):
+        # two posix tiers with no explicit stats= must NOT share the
+        # process-global sink, or every per-tier breakdown would show the
+        # same merged traffic
+        with build_fdb({
+            "type": "select",
+            "rules": [{"match": "class=od",
+                       "fdb": {"backend": "posix", "root": str(tmp_path / "hot")}}],
+            "default": {"backend": "posix", "root": str(tmp_path / "cold")},
+        }) as fdb:
+            fdb.archive(ident(cls="od"), b"x" * 1000)
+            fdb.flush()
+            assert len(fdb.io_stats()) == 2
+            tiers = fdb.stats_snapshot()["tiers"]
+            assert tiers[0]["bytes_written"] >= 1000  # hot saw the traffic
+            assert tiers[1]["bytes_written"] == 0     # cold saw none of it
