@@ -42,6 +42,16 @@ and writes per-backend/per-``n_procs`` aggregate bandwidth + p50/p95/p99 op
 latencies to ``BENCH_contention.json``:
 
     PYTHONPATH=src python benchmarks/fdb_hammer.py --scaling --procs 32
+
+GRIB codec mode (``--codec-nbits N``): archive float32 fields through
+``archive_fields`` — the whole output-step batch bit-packs in ONE
+``grib_pack`` Pallas launch before it touches the store — and retrieve
+through ``retrieve_fields`` (lazy per-chunk unpack).  The sweeps then report
+effective (pre-codec) next to wire bandwidth; ``--scaling`` adds a
+``<backend>+codecN`` cell per backend to ``BENCH_contention.json``:
+
+    PYTHONPATH=src python benchmarks/fdb_hammer.py --scaling --codec-nbits 16
+    PYTHONPATH=src python benchmarks/fdb_hammer.py --config tiered-codec
 """
 
 from __future__ import annotations
@@ -55,6 +65,7 @@ import numpy as np
 
 from repro.core import (
     AsyncFDB,
+    CodecFDB,
     Key,
     NWP_SCHEMA_DAOS,
     NWP_SCHEMA_POSIX,
@@ -62,6 +73,7 @@ from repro.core import (
     build_fdb,
     make_fdb,
     make_router,
+    wire_size,
 )
 from repro.core.daos import DaosEngine
 from repro.core.posix import PosixStats
@@ -75,6 +87,7 @@ __all__ = [
     "run_hammer_contended",
     "scaling_sweep",
     "TIERED_CONFIG",
+    "TIERED_CODEC_CONFIG",
     "load_config",
     "run_config",
 ]
@@ -93,6 +106,10 @@ class HammerSpec:
     field_size: int = 1 << 16
     io: str = "sync"       # 'sync' | 'batched' | 'async'
     n_datasets: int = 1    # distinct forecast runs (router lanes shard these)
+    #: GRIB codec path: archive float32 fields through ``archive_fields``
+    #: (one ``grib_pack`` launch per output-step batch) and retrieve through
+    #: ``retrieve_fields``; None = raw opaque payloads (the seed path)
+    codec_nbits: int | None = None
 
     @property
     def fields_per_proc(self) -> int:
@@ -101,6 +118,27 @@ class HammerSpec:
     @property
     def total_bytes(self) -> int:
         return self.n_procs * self.fields_per_proc * self.field_size
+
+    @property
+    def field_shape(self) -> tuple[int, int]:
+        """(H, W) of the float32 grid carrying ``field_size`` raw bytes —
+        codec mode archives arrays, not opaque byte strings.  W is pinned
+        to 128 (the kernels' lane width)."""
+        if self.field_size % 512:
+            raise ValueError(
+                f"codec mode needs field_size divisible by 512 "
+                f"(float32 rows of 128), got {self.field_size}"
+            )
+        return (self.field_size // 512, 128)
+
+    @property
+    def total_wire_bytes(self) -> int:
+        """Post-codec bytes on the wire (== ``total_bytes`` on raw runs,
+        assuming a uniform ``codec_nbits`` width on codec runs)."""
+        if self.codec_nbits is None:
+            return self.total_bytes
+        per_field = wire_size(self.field_shape, self.codec_nbits)
+        return self.n_procs * self.fields_per_proc * per_field
 
 
 def make_backend(
@@ -111,21 +149,29 @@ def make_backend(
     lanes: int = 1,
     stats=None,
     contention=None,
+    codec_nbits: int | None = None,
 ):
-    """Build the FDB under test: a single-lane FDB, or an N-lane router."""
+    """Build the FDB under test: a single-lane FDB, or an N-lane router;
+    ``codec_nbits`` wraps it in a :class:`CodecFDB` tier of that width."""
     if backend not in ("daos", "posix"):
         raise ValueError(f"unknown backend {backend!r}; pick 'daos' or 'posix'")
     schema = NWP_SCHEMA_DAOS if backend == "daos" else NWP_SCHEMA_POSIX
     if lanes > 1:
         if backend == "daos":
-            return make_router(
+            fdb = make_router(
                 "daos", lanes, schema=schema,
                 engine=engine or DaosEngine(contention=contention), contention=contention,
             )
-        return make_router("posix", lanes, schema=schema, root=root, stats=stats, contention=contention)
-    if backend == "daos":
-        return make_fdb("daos", schema=schema, engine=engine or DaosEngine(contention=contention))
-    return make_fdb("posix", schema=schema, root=root, stats=stats, contention=contention)
+        else:
+            fdb = make_router("posix", lanes, schema=schema, root=root, stats=stats,
+                              contention=contention)
+    elif backend == "daos":
+        fdb = make_fdb("daos", schema=schema, engine=engine or DaosEngine(contention=contention))
+    else:
+        fdb = make_fdb("posix", schema=schema, root=root, stats=stats, contention=contention)
+    if codec_nbits is not None:
+        fdb = CodecFDB(fdb, nbits=codec_nbits, owns_inner=True)
+    return fdb
 
 
 def _field_key(member: int, step: int, param: int, level: int, n_datasets: int = 1) -> Key:
@@ -145,6 +191,23 @@ def _step_keys(spec: HammerSpec, member: int, step: int) -> list[Key]:
     ]
 
 
+def _step_fields(spec: HammerSpec, member: int, step: int) -> np.ndarray:
+    """One output step's worth of float32 fields (deterministic per
+    member/step — temperature-like values, so the quantisation is honest)."""
+    h, w = spec.field_shape
+    rng = np.random.default_rng(1 + member * 10_007 + step)
+    fields = rng.standard_normal((spec.n_params * spec.n_levels, h, w))
+    return (fields * 40.0 + 250.0).astype(np.float32)
+
+
+def _step_request(spec: HammerSpec, member: int, step: int) -> dict:
+    """The MARS request covering exactly one member/step batch."""
+    base = dict(_field_key(member, step, 0, 0, spec.n_datasets))
+    base["param"] = [str(130 + p) for p in range(spec.n_params)]
+    base["levelist"] = [str(lv) for lv in range(spec.n_levels)]
+    return base
+
+
 def run_hammer(fdb, spec: HammerSpec, mode: str) -> dict:
     """mode: 'archive' | 'retrieve' | 'list'.  Returns timings + bandwidth."""
     if spec.io not in IO_MODES:
@@ -156,14 +219,25 @@ def run_hammer(fdb, spec: HammerSpec, mode: str) -> dict:
 
     def proc(member: int) -> None:
         handle = fdb
-        if spec.io == "async":
-            # one async facade per "process", as the I/O servers would hold
+        if spec.io == "async" and spec.codec_nbits is None:
+            # one async facade per "process", as the I/O servers would hold.
+            # codec mode skips the wrapper: archive_fields is already whole-
+            # batch amortised, and packing ABOVE the tree would bypass
+            # per-tier codec widths and strand the per-proc telemetry sink
+            # (compose codec OVER async when both are wanted)
             handle = AsyncFDB(fdb, writers=2, batch_size=16)
         try:
             t0 = time.perf_counter()
             if mode == "archive":
                 for step in range(spec.n_steps):
-                    if spec.io == "batched":
+                    if spec.codec_nbits is not None:
+                        # codec path: the whole step batch bit-packs in ONE
+                        # grib_pack launch, then lands via archive_batch
+                        # (nbits stays None — the facade's tier width rules)
+                        handle.archive_fields(
+                            _step_keys(spec, member, step), _step_fields(spec, member, step)
+                        )
+                    elif spec.io == "batched":
                         handle.archive_batch([(k, payload) for k in _step_keys(spec, member, step)])
                     else:  # sync round-trips, or async enqueues to the pool
                         for k in _step_keys(spec, member, step):
@@ -171,7 +245,12 @@ def run_hammer(fdb, spec: HammerSpec, mode: str) -> dict:
                     handle.flush()  # once per output step, as the I/O servers do
             elif mode == "retrieve":
                 for step in range(spec.n_steps):
-                    if spec.io == "sync":
+                    if spec.codec_nbits is not None:
+                        arrs = handle.retrieve_fields(_step_request(spec, member, step)).arrays()
+                        assert arrs.shape == (
+                            spec.n_params * spec.n_levels, *spec.field_shape,
+                        )
+                    elif spec.io == "sync":
                         for k in _step_keys(spec, member, step):
                             data = handle.read(k)
                             assert data is not None and len(data) == spec.field_size
@@ -179,10 +258,7 @@ def run_hammer(fdb, spec: HammerSpec, mode: str) -> dict:
                         datas = handle.read_batch(_step_keys(spec, member, step))
                         assert all(d is not None and len(d) == spec.field_size for d in datas)
                     else:  # async: MARS-style request, parallel batched reads
-                        base = dict(_field_key(member, step, 0, 0, spec.n_datasets))
-                        base["param"] = [str(130 + p) for p in range(spec.n_params)]
-                        base["levelist"] = [str(lv) for lv in range(spec.n_levels)]
-                        datas = handle.retrieve_many(base).read_all()
+                        datas = handle.retrieve_many(_step_request(spec, member, step)).read_all()
                         assert len(datas) == spec.n_params * spec.n_levels
                         assert all(d is not None and len(d) == spec.field_size for d in datas.values())
             elif mode == "list":
@@ -209,15 +285,23 @@ def run_hammer(fdb, spec: HammerSpec, mode: str) -> dict:
         raise errors[0]
     span = max(ends) - min(starts)
     nbytes = spec.total_bytes if mode != "list" else 0
-    return {
+    res = {
         "mode": mode,
         "io": spec.io,
         "global_span_s": span,
         "wall_s": wall,
+        # application (pre-codec) bytes over global time — the bandwidth
+        # that matters operationally (GRIB traffic is always packed)
         "bandwidth_GiBps": (nbytes / span / GiB) if nbytes else 0.0,
         "fields": spec.fields_per_proc * spec.n_procs,
         "us_per_field": 1e6 * span / max(1, spec.fields_per_proc * spec.n_procs),
     }
+    if spec.codec_nbits is not None and nbytes:
+        wire = spec.total_wire_bytes
+        res["effective_GiBps"] = res["bandwidth_GiBps"]
+        res["wire_GiBps"] = wire / span / GiB
+        res["codec_ratio"] = spec.total_bytes / wire
+    return res
 
 
 def sweep(spec: HammerSpec, backends=("daos", "posix"), lanes_sweep=(1, 2)) -> list[dict]:
@@ -231,16 +315,21 @@ def sweep(spec: HammerSpec, backends=("daos", "posix"), lanes_sweep=(1, 2)) -> l
             for io in IO_MODES:
                 cell = replace(spec, io=io, n_datasets=max(spec.n_datasets, lanes))
                 with tempfile.TemporaryDirectory() as td:
-                    fdb = make_backend(backend, root=td, engine=None, lanes=lanes)
+                    fdb = make_backend(backend, root=td, engine=None, lanes=lanes,
+                                       codec_nbits=spec.codec_nbits)
                     try:
                         w = run_hammer(fdb, cell, "archive")
                         r = run_hammer(fdb, cell, "retrieve")
                     finally:
                         fdb.close()
-                rows.append({"backend": backend, "lanes": lanes, "io": io,
-                             "write_GiBps": w["bandwidth_GiBps"],
-                             "read_GiBps": r["bandwidth_GiBps"],
-                             "us_per_field_w": w["us_per_field"]})
+                row = {"backend": backend, "lanes": lanes, "io": io,
+                       "write_GiBps": w["bandwidth_GiBps"],
+                       "read_GiBps": r["bandwidth_GiBps"],
+                       "us_per_field_w": w["us_per_field"]}
+                if "codec_ratio" in w:
+                    row["wire_GiBps_w"] = w["wire_GiBps"]
+                    row["codec_ratio"] = w["codec_ratio"]
+                rows.append(row)
     return rows
 
 
@@ -284,12 +373,36 @@ TIERED_CONFIG: dict = {
     "default": {"backend": "posix", "schema": "nwp-posix"},
 }
 
+#: the tiered deployment with the GRIB codec fused per tier: the hot DAOS
+#: stream packs at 16 bits (NVM capacity is the scarce resource), the cold
+#: POSIX archive keeps 24 bits of precision — one ``archive_fields`` call
+#: routes, then each tier packs its own slice at its own width
+TIERED_CODEC_CONFIG: dict = {
+    "type": "select",
+    "rules": [
+        {
+            "match": "number=0",
+            "fdb": {
+                "type": "codec", "nbits": 16,
+                "inner": {"backend": "daos", "schema": "nwp-daos"},
+            },
+        },
+    ],
+    "default": {
+        "type": "codec", "nbits": 24,
+        "inner": {"backend": "posix", "schema": "nwp-posix"},
+    },
+}
+
 
 def load_config(source: str) -> dict:
-    """Resolve the ``--config`` argument: the built-in ``tiered`` demo,
-    inline JSON (starts with ``{``), or a path to a JSON file."""
+    """Resolve the ``--config`` argument: the built-in ``tiered`` /
+    ``tiered-codec`` demos, inline JSON (starts with ``{``), or a path to a
+    JSON file."""
     if source == "tiered":
         return json.loads(json.dumps(TIERED_CONFIG))  # deep copy
+    if source == "tiered-codec":
+        return json.loads(json.dumps(TIERED_CODEC_CONFIG))
     if source.lstrip().startswith("{"):
         return json.loads(source)
     with open(source) as f:
@@ -340,7 +453,7 @@ def run_config(config: dict, spec: HammerSpec, io_modes=IO_MODES) -> list[dict]:
                 n_step0 = sum(1 for _ in fdb.list({"step": "0"}))
                 snap = fdb.stats_snapshot()
         parts = snap.get("tiers") or snap.get("lanes") or []
-        rows.append({
+        row = {
             "io": io,
             "write_GiBps": w["bandwidth_GiBps"],
             "read_GiBps": r["bandwidth_GiBps"],
@@ -348,7 +461,20 @@ def run_config(config: dict, spec: HammerSpec, io_modes=IO_MODES) -> list[dict]:
             "listed_step0": n_step0,
             "n_parts": len(parts),
             "part_bytes_written": [p.get("bytes_written", 0) for p in parts],
-        })
+            # effective (pre-codec) vs wire bytes from the merged telemetry:
+            # equal on raw paths, effective > wire behind codec tiers (the
+            # per-tier widths make the analytic formula inapplicable here,
+            # so the STATS are the ground truth)
+            "wire_bytes_written": snap.get("bytes_written", 0),
+            "effective_bytes_written": snap.get("effective_bytes_written", 0),
+            "effective_bytes_read": snap.get("effective_bytes_read", 0),
+        }
+        if spec.codec_nbits is not None:
+            row["codec_ratio_w"] = (
+                row["effective_bytes_written"] / row["wire_bytes_written"]
+                if row["wire_bytes_written"] else 0.0
+            )
+        rows.append(row)
     return rows
 
 
@@ -362,7 +488,11 @@ def _proc_quanta(handle, spec: HammerSpec, member: int, mode: str, payload: byte
     for step in range(spec.n_steps):
         keys = _step_keys(spec, member, step)
         if mode == "archive":
-            if spec.io == "batched":
+            if spec.codec_nbits is not None:
+                # one grib_pack launch for the step batch, then one landing
+                handle.archive_fields(keys, _step_fields(spec, member, step))
+                yield
+            elif spec.io == "batched":
                 handle.archive_batch([(k, payload) for k in keys])
                 yield
             else:
@@ -372,7 +502,11 @@ def _proc_quanta(handle, spec: HammerSpec, member: int, mode: str, payload: byte
             handle.flush()  # once per output step, as the I/O servers do
             yield
         elif mode == "retrieve":
-            if spec.io == "batched":
+            if spec.codec_nbits is not None:
+                arrs = handle.retrieve_fields(_step_request(spec, member, step)).arrays()
+                assert arrs.shape == (len(keys), *spec.field_shape)
+                yield
+            elif spec.io == "batched":
                 datas = handle.read_batch(keys)
                 assert all(d is not None and len(d) == spec.field_size for d in datas)
                 yield
@@ -419,7 +553,7 @@ def run_hammer_contended(fdb, spec: HammerSpec, mode: str, model) -> dict:
     span = max(c.t for c in clients)
     bytes_per_proc = spec.fields_per_proc * spec.field_size
     per_proc = [bytes_per_proc / c.t / GiB for c in clients]
-    return {
+    res = {
         "mode": mode,
         "n_procs": spec.n_procs,
         "span_s": span,
@@ -428,6 +562,14 @@ def run_hammer_contended(fdb, spec: HammerSpec, mode: str, model) -> dict:
         "per_proc_GiBps_mean": sum(per_proc) / len(per_proc),
         "us_per_field": 1e6 * span / max(1, spec.fields_per_proc * spec.n_procs),
     }
+    if spec.codec_nbits is not None:
+        # the contention model charges the WIRE bytes, but the run moved
+        # total_bytes of application data: effective/wire is the codec win
+        wire = spec.total_wire_bytes
+        res["effective_GiBps"] = res["agg_GiBps"]
+        res["wire_GiBps"] = wire / span / GiB
+        res["codec_ratio"] = spec.total_bytes / wire
+    return res
 
 
 def _latency_summary(snapshot: dict) -> dict:
@@ -473,27 +615,41 @@ def scaling_sweep(
     *,
     virtual: bool = True,
     out: str | None = "BENCH_contention.json",
+    codec_nbits: int | None = None,
 ) -> dict:
     """The paper's client-scaling experiment: fresh backend + contention
     model per cell, archive then retrieve, per-proc and aggregate bandwidth
     plus latency percentiles from the metrics package; the analytical curve
-    from :mod:`repro.simulation.cluster` rides along for cross-checking."""
+    from :mod:`repro.simulation.cluster` rides along for cross-checking.
+
+    ``codec_nbits`` adds a codec cell per backend (labelled
+    ``"<backend>+codec<n>"``, raw cells keep their plain labels): the same
+    sweep through a :class:`CodecFDB` tier, reporting effective (pre-codec)
+    vs wire bandwidth and their ratio — the compression win under
+    contention."""
     import tempfile
 
     results: dict = {
         "spec": asdict(spec),
         "virtual_clock": virtual,
         "procs_list": list(procs_list),
+        "codec_nbits": codec_nbits,
         "backends": {},
     }
+    cells: list[tuple[str, str, int | None]] = []
     for backend in backends:
+        cells.append((backend, backend, None))
+        if codec_nbits is not None:
+            cells.append((f"{backend}+codec{codec_nbits}", backend, codec_nbits))
+    for label, backend, nbits in cells:
         rows = []
         for n in procs_list:
-            cell = replace(spec, n_procs=n)
+            cell = replace(spec, n_procs=n, codec_nbits=nbits)
             model = make_contention(backend, virtual=virtual)
             with tempfile.TemporaryDirectory() as td:
-                stats = PosixStats(name=f"{backend}-x{n}") if backend == "posix" else None
-                fdb = make_backend(backend, root=td, engine=None, stats=stats, contention=model)
+                stats = PosixStats(name=f"{label}-x{n}") if backend == "posix" else None
+                fdb = make_backend(backend, root=td, engine=None, stats=stats,
+                                   contention=model, codec_nbits=nbits)
                 try:
                     w = run_hammer_contended(fdb, cell, "archive", model)
                     w["latency"] = _latency_summary(fdb.stats_snapshot())
@@ -510,11 +666,13 @@ def scaling_sweep(
                     fdb.close()
             rows.append({"n_procs": n, "write": w, "read": r})
         per_proc = [row["write"]["per_proc_GiBps_mean"] for row in rows]
-        results["backends"][backend] = {
+        results["backends"][label] = {
             "sweep": rows,
             "knee_n_procs": find_knee(per_proc, list(procs_list)),
             "analytic": analytic_curve(backend, procs_list, spec),
         }
+        if nbits is not None:
+            results["backends"][label]["codec_nbits"] = nbits
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)
@@ -556,12 +714,20 @@ def main() -> None:
                     help="build the FDB under test from a declarative config "
                          "(repro.core.config grammar) and sweep it through the "
                          "io modes; 'tiered' is the built-in hot(DAOS)/cold("
-                         "POSIX) select config, otherwise inline JSON or a "
-                         "path to a JSON file (posix roots are auto-filled)")
+                         "POSIX) select config, 'tiered-codec' the same with "
+                         "per-tier GRIB codec widths, otherwise inline JSON or "
+                         "a path to a JSON file (posix roots are auto-filled)")
+    ap.add_argument("--codec-nbits", type=int, default=None, metavar="N",
+                    help="drive the GRIB codec path: archive float32 fields "
+                         "through archive_fields (one grib_pack launch per "
+                         "step batch, N-bit codes) and decode on retrieve; "
+                         "--scaling adds a '<backend>+codecN' cell per "
+                         "backend reporting effective vs wire bandwidth")
     args = ap.parse_args()
 
     spec = HammerSpec(n_procs=args.procs, n_steps=args.steps, n_params=args.params,
-                      n_levels=args.levels, field_size=args.field_size, io=args.io)
+                      n_levels=args.levels, field_size=args.field_size, io=args.io,
+                      codec_nbits=args.codec_nbits)
 
     if args.config:
         config = load_config(args.config)
@@ -576,6 +742,10 @@ def main() -> None:
             if row["part_bytes_written"]:
                 parts = ", ".join(f"{b / (1 << 20):.1f} MiB" for b in row["part_bytes_written"])
                 print(f"{'':8s} per-part bytes written: {parts}")
+            if "codec_ratio_w" in row:
+                print(f"{'':8s} effective {row['effective_bytes_written'] / (1 << 20):.1f} MiB "
+                      f"over wire {row['wire_bytes_written'] / (1 << 20):.1f} MiB "
+                      f"(x{row['codec_ratio_w']:.2f} codec win)")
         return
 
     if args.request:
@@ -604,17 +774,19 @@ def main() -> None:
         print(f"fdb-hammer scaling sweep (virtual clock): n_procs in {procs_list}, "
               f"{spec.fields_per_proc} fields x {spec.field_size} B per proc\n")
         results = scaling_sweep(spec, backends=tuple(args.backends),
-                                procs_list=procs_list, out=args.out)
-        print(f"{'backend':8s} {'procs':>5s} {'write agg':>10s} {'write/proc':>11s} "
-              f"{'read/proc':>10s} {'w p99 us':>9s}")
+                                procs_list=procs_list, out=args.out,
+                                codec_nbits=args.codec_nbits)
+        print(f"{'backend':16s} {'procs':>5s} {'write agg':>10s} {'write/proc':>11s} "
+              f"{'read/proc':>10s} {'w p99 us':>9s} {'eff/wire':>9s}")
         for backend, data in results["backends"].items():
             for row in data["sweep"]:
                 w, r = row["write"], row["read"]
                 p99 = max((v["p99_s"] for v in w["latency"].values()), default=0.0)
-                print(f"{backend:8s} {row['n_procs']:5d} {w['agg_GiBps']:10.3f} "
+                ratio = f"{w['codec_ratio']:9.2f}" if "codec_ratio" in w else f"{'-':>9s}"
+                print(f"{backend:16s} {row['n_procs']:5d} {w['agg_GiBps']:10.3f} "
                       f"{w['per_proc_GiBps_mean']:11.3f} {r['per_proc_GiBps_mean']:10.3f} "
-                      f"{1e6 * p99:9.1f}")
-            print(f"{backend:8s} knee at n_procs={data['knee_n_procs']}")
+                      f"{1e6 * p99:9.1f} {ratio}")
+            print(f"{backend:16s} knee at n_procs={data['knee_n_procs']}")
         print(f"\nwrote {args.out}")
         return
 

@@ -22,6 +22,16 @@ Public surface:
 from .async_fdb import AsyncFDB
 from .catalogue import Catalogue, ListEntry
 from .client import FDBClient, WipeReport
+from .codec import (
+    CODEC_HEADER_SIZE,
+    CodecError,
+    CodecFDB,
+    DecodedFieldSet,
+    decode_payloads,
+    encode_fields,
+    is_codec_payload,
+    wire_size,
+)
 from .config import (
     ConfigError,
     FDBConfig,
@@ -71,6 +81,14 @@ __all__ = [
     "WipeReport",
     "FieldSet",
     "ConcatenatedDataHandle",
+    "CODEC_HEADER_SIZE",
+    "CodecError",
+    "CodecFDB",
+    "DecodedFieldSet",
+    "decode_payloads",
+    "encode_fields",
+    "is_codec_payload",
+    "wire_size",
     "FDB",
     "make_fdb",
     "SelectFDB",

@@ -72,6 +72,10 @@ class AsyncFDB(FDBClient):
             raise ValueError("need at least one writer thread")
         self.fdb = fdb
         self.schema: Schema = fdb.schema
+        # the codec pack width is the WRAPPED client's choice (a CodecFDB
+        # tier fixes it declaratively) — archive_fields packs up front on
+        # the caller's thread, so the width must ride through this facade
+        self._codec_nbits = getattr(fdb, "_codec_nbits", type(self)._codec_nbits)
         self._batch_size = max(1, batch_size)
         self._read_batch_size = max(1, read_batch_size)
         self._readers = max(1, readers)
@@ -231,10 +235,11 @@ class AsyncFDB(FDBClient):
 
     # ------------------------------------------------------------- telemetry
     def io_stats(self) -> list:
-        """Backend stats plus this facade's queue/batch telemetry."""
+        """Backend stats plus this facade's queue/batch telemetry (and the
+        codec sink, when this facade ever packed fields)."""
         getter = getattr(self.fdb, "io_stats", None)
         below = list(getter()) if getter is not None else []
-        return below + [self.async_stats]
+        return below + [self.async_stats] + self._codec_sinks()
 
     # ---------------------------------------------------------------- lifecycle
     def close(self) -> None:

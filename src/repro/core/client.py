@@ -72,6 +72,11 @@ class FDBClient(abc.ABC):
 
     schema: Schema
 
+    #: pack width used by :meth:`archive_fields` when the caller passes no
+    #: explicit ``nbits`` — :class:`~repro.core.codec.CodecFDB` tiers fix it
+    #: declaratively per tier
+    _codec_nbits: int = 16
+
     # -------------------------------------------------------- required hooks
     @abc.abstractmethod
     def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
@@ -143,6 +148,63 @@ class FDBClient(abc.ABC):
     def drain(self) -> None:
         """Write barrier: all accepted archives have reached the backend.
         Synchronous clients are always drained; queueing facades override."""
+
+    # ------------------------------------------------------------- field codec
+    def _codec_sink(self):
+        """This client's codec telemetry sink (lazily created — clients that
+        never touch the field codec carry no extra state)."""
+        s = self.__dict__.get("_codec_stats")
+        if s is None:
+            from ..metrics.iostats import IOStats
+
+            s = self.__dict__["_codec_stats"] = IOStats("codec")
+        return s
+
+    def _codec_sinks(self) -> list:
+        """The codec sink as a (possibly empty) list — facades append this
+        to their ``io_stats()`` so effective-vs-wire bytes surface in every
+        merged snapshot without a sink for clients that never packed."""
+        s = self.__dict__.get("_codec_stats")
+        return [s] if s is not None else []
+
+    def archive_fields(self, keys: Sequence[Key | Mapping[str, str]], fields,
+                       *, nbits: int | None = None) -> None:
+        """Archive a batch of 2-D field arrays GRIB-packed on the wire path.
+
+        ``fields`` is an ``(F, H, W)`` array (or a sequence of ``(H, W)``
+        arrays) aligned with ``keys``.  The WHOLE batch is bit-packed in one
+        ``grib_pack`` Pallas launch (one per distinct shape when ragged) and
+        handed to :meth:`archive_batch`, so the backend's amortised write
+        path sees wire payloads, exactly like real GRIB traffic.  Routing
+        facades (SelectFDB, FDBRouter) split the batch per tier/lane FIRST,
+        so a ``{"type": "codec"}`` tier packs at its own declared width;
+        ``nbits`` overrides the client's default for this call."""
+        from .codec import encode_fields
+
+        keys = list(keys)
+        payloads = encode_fields(
+            fields,
+            nbits=self._codec_nbits if nbits is None else nbits,
+            stats=self._codec_sink(),
+        )
+        if len(keys) != len(payloads):
+            raise ValueError(
+                f"archive_fields got {len(keys)} keys for {len(payloads)} fields"
+            )
+        self.archive_batch(list(zip(keys, payloads)))
+
+    def retrieve_fields(self, request) -> "DecodedFieldSet":
+        """MARS-style retrieval of codec'd fields: ``retrieve_many`` under
+        the hood, decoded lazily chunk by chunk — a partial request slice
+        pays one backend fetch and one ``grib_unpack`` launch per chunk.
+        Payloads are self-describing, so mixed-width datasets (16-bit hot,
+        24-bit cold) decode uniformly; a raw (non-codec) payload raises
+        :class:`~repro.core.codec.CodecError` naming the field."""
+        from .codec import DecodedFieldSet
+
+        fs = self.retrieve_many(request)
+        chunk = self._fieldset_batch if self._fieldset_batch is not None else len(fs)
+        return DecodedFieldSet(fs, chunk=chunk, stats=self._codec_sink())
 
     # --------------------------------------------------------------- requests
     def _validated_request(self, request) -> Request:

@@ -30,6 +30,13 @@ composition of the four facades, nested arbitrarily:
     an :class:`~repro.core.async_fdb.AsyncFDB` wrapping the inner tree
     (owned: closing the facade closes the tree it built).
 
+``{"type": "codec", "nbits": 16, "inner": {...}}``
+    a :class:`~repro.core.codec.CodecFDB` tier: ``archive_fields`` packs at
+    ``nbits`` (GRIB simple packing through the Pallas kernels) before the
+    inner tree's store write, ``retrieve_fields`` decodes the
+    self-describing payloads lazily — a hot DAOS tier can pack at 16 bits
+    while the cold POSIX archive keeps 24, declaratively per tier.
+
 Backends are pluggable: :func:`register_backend` maps a name to a
 ``(catalogue_factory, store_factory)`` pair, so tests can register
 in-memory or fault-injecting backends and route to them from config without
@@ -281,7 +288,7 @@ register_backend(
 # Validation + JSON round-trip
 # ---------------------------------------------------------------------------
 
-_TYPES = ("local", "select", "dist", "async")
+_TYPES = ("local", "select", "dist", "async", "codec")
 
 
 def _config_type(cfg: Mapping) -> str:
@@ -337,6 +344,15 @@ def validate_config(config: Mapping) -> None:
     elif t == "async":
         if config.get("inner") is None:
             raise ConfigError("async config requires 'inner'")
+        validate_config(config["inner"])
+    elif t == "codec":
+        if config.get("inner") is None:
+            raise ConfigError("codec config requires 'inner'")
+        nbits = config.get("nbits", 16)
+        if not isinstance(nbits, int) or not 1 <= nbits <= 32:
+            raise ConfigError(
+                f"codec nbits must be an int in [1, 32], got {nbits!r}"
+            )
         validate_config(config["inner"])
 
 
@@ -460,6 +476,8 @@ def build_fdb(config: Mapping) -> FDBClient:
         return _build_select(config)
     if t == "dist":
         return _build_dist(config)
+    if t == "codec":
+        return _build_codec(config)
     return _build_async(config)
 
 
@@ -560,6 +578,21 @@ def _build_dist(cfg: Mapping) -> FDBClient:
         )
     except BaseException:
         _close_built(lanes_cfg, lanes)
+        raise
+
+
+def _build_codec(cfg: Mapping) -> FDBClient:
+    from .codec import CodecFDB
+
+    inner_cfg = cfg["inner"]
+    inner = build_fdb(inner_cfg)
+    try:
+        # same ownership rule as async: the tier owns what the config built
+        # beneath it; a prebuilt pass-through inner stays caller-owned
+        owns = cfg.get("owns_inner", not isinstance(inner_cfg, FDBClient))
+        return CodecFDB(inner, nbits=cfg.get("nbits", 16), owns_inner=owns)
+    except BaseException:
+        _close_built([inner_cfg], [inner])
         raise
 
 

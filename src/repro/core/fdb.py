@@ -147,7 +147,9 @@ class FDB(FDBClient):
             s = getattr(part, "stats", None)
             if s is not None:
                 seen.setdefault(id(s), s)
-        return list(seen.values())
+        # the codec sink (effective-vs-wire bytes) rides along when this
+        # client ever packed/unpacked fields
+        return list(seen.values()) + self._codec_sinks()
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:

@@ -98,6 +98,15 @@ class FieldSet:
         self._ensure(i)
         return self._handles[i]
 
+    def handle_at(self, i: int) -> DataHandle | None:
+        """Handle by POSITION (resolves the containing chunk) — duplicate
+        keys in a request map to distinct positions, so positional access is
+        what chunked consumers (the codec's :class:`DecodedFieldSet`) use."""
+        if not 0 <= i < len(self._keys):
+            raise IndexError(i)
+        self._ensure(i)
+        return self._handles[i]
+
     def __contains__(self, key: object) -> bool:
         if not isinstance(key, Key):
             try:
@@ -150,6 +159,18 @@ class FieldSet:
             return h.read()
         finally:
             h.close()
+
+    # ------------------------------------------------------------------ codec
+    def decode(self, *, chunk: int | None = None, stats=None):
+        """View this set through the GRIB codec: a lazy
+        :class:`~repro.core.codec.DecodedFieldSet` that unpacks the
+        self-describing wire payloads chunk by chunk (one ``grib_unpack``
+        launch per chunk) as it is consumed."""
+        from .codec import DecodedFieldSet
+
+        return DecodedFieldSet(
+            self, chunk=self._batch if chunk is None else chunk, stats=stats
+        )
 
 
 class ConcatenatedDataHandle(DataHandle):

@@ -87,6 +87,21 @@ class FDBRouter(FDBClient):
         for lane_i, group in groups.items():
             self.lanes[lane_i].archive_batch(group)
 
+    def archive_fields(self, keys, fields, *, nbits=None) -> None:
+        """Shard the batch BEFORE packing: each lane packs its own slice
+        (lanes may be codec tiers with distinct widths), and every lane
+        still sees one whole-batch kernel launch for its share."""
+        from .codec import take_fields
+
+        keys = list(keys)
+        groups: dict[int, list[int]] = {}
+        for i, key in enumerate(keys):
+            groups.setdefault(self.lane_index(key), []).append(i)
+        for lane_i, idxs in groups.items():
+            self.lanes[lane_i].archive_fields(
+                [keys[i] for i in idxs], take_fields(fields, idxs), nbits=nbits
+            )
+
     def flush(self) -> None:
         for lane in self.lanes:
             lane.flush()
@@ -132,7 +147,7 @@ class FDBRouter(FDBClient):
                 continue
             for s in getter():
                 seen.setdefault(id(s), s)
-        return list(seen.values())
+        return list(seen.values()) + self._codec_sinks()
 
     def stats_snapshot(self) -> dict:
         """Merged telemetry plus the per-lane breakdown."""

@@ -157,6 +157,23 @@ class SelectFDB(FDBClient):
         for client, group in groups.values():
             client.archive_batch(group)
 
+    def archive_fields(self, keys, fields, *, nbits=None) -> None:
+        """Route the batch BEFORE packing: each tier packs its own slice at
+        its own width, so a ``{"type": "codec", "nbits": 16}`` hot tier and
+        a 24-bit cold tier coexist behind one call (the paper's per-tier
+        layout choice, applied to the codec)."""
+        from .codec import take_fields
+
+        keys = list(keys)
+        groups: dict[int, tuple[FDBClient, list[int]]] = {}
+        for i, key in enumerate(keys):
+            client = self._route_or_raise(key)
+            groups.setdefault(id(client), (client, []))[1].append(i)
+        for client, idxs in groups.values():
+            client.archive_fields(
+                [keys[i] for i in idxs], take_fields(fields, idxs), nbits=nbits
+            )
+
     def flush(self) -> None:
         for tier in self.tiers:
             tier.flush()
@@ -214,7 +231,7 @@ class SelectFDB(FDBClient):
         for tier in self.tiers:
             for s in tier.io_stats():
                 seen.setdefault(id(s), s)
-        return list(seen.values())
+        return list(seen.values()) + self._codec_sinks()
 
     def stats_snapshot(self) -> dict:
         """Merged telemetry plus the per-tier breakdown."""

@@ -11,7 +11,30 @@ import numpy as np
 from .kernel import grib_pack_call, grib_unpack_call
 from .ref import field_stats
 
-__all__ = ["grib_pack", "grib_unpack", "pack_to_bytes", "unpack_from_bytes"]
+__all__ = [
+    "grib_pack",
+    "grib_unpack",
+    "pack_to_bytes",
+    "payload_dtype",
+    "unpack_from_bytes",
+]
+
+
+def payload_dtype(nbits: int) -> np.dtype:
+    """The smallest unsigned container that holds an ``nbits`` code.
+
+    GRIB's true bit-stream packs codes back to back; the wire container
+    here is the next power-of-two integer width (uint8/uint16/uint32), so
+    nbits in (8, 16, 32] trade no space while 24-bit codes ride in 4-byte
+    containers — the effective-vs-wire telemetry reports container bytes.
+    """
+    if not isinstance(nbits, int) or not 1 <= nbits <= 32:
+        raise ValueError(f"nbits must be an int in [1, 32], got {nbits!r}")
+    if nbits <= 8:
+        return np.dtype(np.uint8)
+    if nbits <= 16:
+        return np.dtype(np.uint16)
+    return np.dtype(np.uint32)
 
 
 @partial(jax.jit, static_argnames=("nbits", "interpret"))
@@ -35,19 +58,37 @@ def grib_unpack(codes: jax.Array, ref: jax.Array, scale: jax.Array, *, interpret
 
 def pack_to_bytes(x: np.ndarray, nbits: int = 16) -> tuple[bytes, dict]:
     """Host-side convenience: one field (H, W) -> GRIB-ish byte payload."""
-    codes, ref, scale = grib_pack(jnp.asarray(x)[None])
-    arr = np.asarray(codes[0], dtype=np.uint32).astype(np.uint16)
+    dtype = payload_dtype(nbits)
+    codes, ref, scale = grib_pack(jnp.asarray(x)[None], nbits=nbits)
+    arr = np.asarray(codes[0]).astype(dtype)
     meta = {
         "ref": float(ref[0]),
         "scale": float(scale[0]),
         "shape": list(x.shape),
         "nbits": nbits,
+        "dtype": dtype.name,
     }
     return arr.tobytes(), meta
 
 
 def unpack_from_bytes(payload: bytes, meta: dict) -> np.ndarray:
     h, w = meta["shape"]
-    codes = np.frombuffer(payload, dtype=np.uint16).reshape(h, w).astype(np.int32)
-    out = grib_unpack(jnp.asarray(codes)[None], jnp.asarray([meta["ref"]]), jnp.asarray([meta["scale"]]))
+    dtype = (
+        np.dtype(meta["dtype"])
+        if "dtype" in meta
+        else payload_dtype(meta.get("nbits", 16))
+    )
+    expected = h * w * dtype.itemsize
+    if len(payload) != expected:
+        raise ValueError(
+            f"GRIB payload is {len(payload)} bytes but meta describes a "
+            f"({h}, {w}) field of {dtype.name} codes ({expected} bytes) — "
+            "payload and meta do not belong together"
+        )
+    codes = np.frombuffer(payload, dtype=dtype).reshape(h, w).astype(np.int32)
+    out = grib_unpack(
+        jnp.asarray(codes)[None],
+        jnp.asarray([meta["ref"]], dtype=jnp.float32),
+        jnp.asarray([meta["scale"]], dtype=jnp.float32),
+    )
     return np.asarray(out[0])

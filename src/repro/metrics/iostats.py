@@ -36,6 +36,11 @@ class IOStats:
         self.op_bytes_r: Counter = Counter()    # bytes read per op name
         self.bytes_written = 0
         self.bytes_read = 0
+        #: pre-codec (decoded) byte totals — what the application archived or
+        #: consumed.  Equal to the wire totals on raw paths; larger on codec
+        #: paths, where effective/wire is the compression win.
+        self.effective_bytes_written = 0
+        self.effective_bytes_read = 0
         self.shard_ops: Counter = Counter()     # DAOS target / POSIX segment
         #: named extra counters (e.g. PosixStats' lock_acquisitions /
         #: mds_ops) — merged and snapshotted generically so subclass
@@ -59,11 +64,18 @@ class IOStats:
         nbytes_r: int = 0,
         shard: int | str | None = None,
         count: int = 1,
+        effective_w: int = 0,
+        effective_r: int = 0,
     ) -> None:
         with self._mu:
-            self._record_locked(op, seconds, nbytes_w, nbytes_r, shard, count)
+            self._record_locked(
+                op, seconds, nbytes_w, nbytes_r, shard, count, effective_w, effective_r
+            )
 
-    def _record_locked(self, op, seconds, nbytes_w, nbytes_r, shard, count) -> None:
+    def _record_locked(
+        self, op, seconds, nbytes_w, nbytes_r, shard, count,
+        effective_w=0, effective_r=0,
+    ) -> None:
         self.ops[op] += count
         if nbytes_w:
             self.bytes_written += nbytes_w
@@ -71,6 +83,10 @@ class IOStats:
         if nbytes_r:
             self.bytes_read += nbytes_r
             self.op_bytes_r[op] += nbytes_r
+        if effective_w:
+            self.effective_bytes_written += effective_w
+        if effective_r:
+            self.effective_bytes_read += effective_r
         if shard is not None:
             self.shard_ops[shard] += count
         if seconds is not None:
@@ -92,6 +108,8 @@ class IOStats:
                     kw.get("nbytes_r", 0),
                     kw.get("shard"),
                     kw.get("count", 1),
+                    kw.get("effective_w", 0),
+                    kw.get("effective_r", 0),
                 )
 
     # --------------------------------------------------------------- reading
@@ -104,6 +122,8 @@ class IOStats:
                 "op_bytes_r": dict(self.op_bytes_r),
                 "bytes_written": self.bytes_written,
                 "bytes_read": self.bytes_read,
+                "effective_bytes_written": self.effective_bytes_written,
+                "effective_bytes_read": self.effective_bytes_read,
                 "shard_ops": {str(k): v for k, v in self.shard_ops.items()},
                 "counters": dict(self.counters),
                 "latency": {op: h.snapshot() for op, h in sorted(self._hist.items())},
@@ -125,6 +145,8 @@ class IOStats:
             self.op_bytes_r.clear()
             self.bytes_written = 0
             self.bytes_read = 0
+            self.effective_bytes_written = 0
+            self.effective_bytes_read = 0
             self.shard_ops.clear()
             self.counters.clear()
             self._hist.clear()
@@ -137,6 +159,7 @@ class IOStats:
             o_bw = Counter(other.op_bytes_w)
             o_br = Counter(other.op_bytes_r)
             o_w, o_r = other.bytes_written, other.bytes_read
+            o_ew, o_er = other.effective_bytes_written, other.effective_bytes_read
             o_shards = Counter(other.shard_ops)
             o_counters = Counter(other.counters)
             o_hist = {op: h.copy() for op, h in other._hist.items()}
@@ -147,6 +170,8 @@ class IOStats:
             self.op_bytes_r.update(o_br)
             self.bytes_written += o_w
             self.bytes_read += o_r
+            self.effective_bytes_written += o_ew
+            self.effective_bytes_read += o_er
             self.shard_ops.update(o_shards)
             self.counters.update(o_counters)
             for op, h in o_hist.items():
