@@ -52,6 +52,17 @@ effective (pre-codec) next to wire bandwidth; ``--scaling`` adds a
 
     PYTHONPATH=src python benchmarks/fdb_hammer.py --scaling --codec-nbits 16
     PYTHONPATH=src python benchmarks/fdb_hammer.py --config tiered-codec
+
+Remote mode (``--remote``): the MEASURED counterpart of ``--scaling`` —
+serve each backend behind an in-process asyncio
+:class:`~repro.core.remote.FDBServer` and hammer it with REAL client
+processes (``multiprocessing`` spawn, one :class:`RemoteFDB` per process,
+one wire frame per output-step batch).  The measured cells land in
+``BENCH_contention.json`` as ``"<backend>+remote"`` entries (tagged
+``"measured": true``) next to the simulated sweep, so the real knee can be
+read against the virtual-clock one:
+
+    PYTHONPATH=src python benchmarks/fdb_hammer.py --remote --procs 4
 """
 
 from __future__ import annotations
@@ -85,7 +96,9 @@ __all__ = [
     "run_request",
     "make_backend",
     "run_hammer_contended",
+    "run_hammer_remote",
     "scaling_sweep",
+    "remote_sweep",
     "TIERED_CONFIG",
     "TIERED_CODEC_CONFIG",
     "load_config",
@@ -679,6 +692,131 @@ def scaling_sweep(
     return results
 
 
+# ---------------------------------------------------------------------------
+# Remote mode (--remote): real client processes against the asyncio server
+# ---------------------------------------------------------------------------
+
+def _remote_proc_worker(addr: str, spec_kw: dict, member: int, mode: str):
+    """One hammer client as a REAL OS process: its own RemoteFDB (own
+    sockets, own GIL), one wire frame per output-step batch.  Module
+    top-level so ``multiprocessing`` spawn can pickle it by reference.
+    Returns wall-clock ``(start, end)`` — ``time.time()`` because the global
+    timing span (paper §4.3) is computed ACROSS processes, and only the
+    wall clock is shared between them."""
+    spec = HammerSpec(**spec_kw)
+    payload = np.random.default_rng(0).bytes(spec.field_size)
+    from repro.core.remote import RemoteFDB
+
+    fdb = RemoteFDB(addr, timeout=300.0)
+    try:
+        t0 = time.time()
+        for step in range(spec.n_steps):
+            keys = _step_keys(spec, member, step)
+            if mode == "archive":
+                fdb.archive_batch([(k, payload) for k in keys])
+                fdb.flush()  # once per output step, as the I/O servers do
+            elif mode == "retrieve":
+                datas = fdb.read_batch(keys)
+                assert all(
+                    d is not None and len(d) == spec.field_size for d in datas
+                )
+            else:
+                raise ValueError(mode)
+        return t0, time.time()
+    finally:
+        fdb.close()
+
+
+def run_hammer_remote(addr: str, spec: HammerSpec, mode: str) -> dict:
+    """Drive ``spec.n_procs`` REAL client processes against the FDB served
+    at *addr*.  Spawn (not fork): the parent holds JAX thread pools and an
+    asyncio loop, neither survives forking.  Bandwidths use global timing
+    across the processes' wall clocks."""
+    import multiprocessing
+
+    ctx = multiprocessing.get_context("spawn")
+    jobs = [(addr, asdict(spec), m, mode) for m in range(spec.n_procs)]
+    with ctx.Pool(processes=spec.n_procs) as pool:
+        times = pool.starmap(_remote_proc_worker, jobs)
+    span = max(t1 for _, t1 in times) - min(t0 for t0, _ in times)
+    span = max(span, 1e-9)
+    bytes_per_proc = spec.fields_per_proc * spec.field_size
+    per_proc = [bytes_per_proc / max(t1 - t0, 1e-9) / GiB for t0, t1 in times]
+    return {
+        "mode": mode,
+        "n_procs": spec.n_procs,
+        "span_s": span,
+        "agg_GiBps": spec.total_bytes / span / GiB,
+        "per_proc_GiBps": per_proc,
+        "per_proc_GiBps_mean": sum(per_proc) / len(per_proc),
+        "us_per_field": 1e6 * span / max(1, spec.fields_per_proc * spec.n_procs),
+        "measured": True,
+    }
+
+
+def remote_sweep(
+    spec: HammerSpec,
+    backends=("posix", "daos"),
+    procs_list=(1, 2, 4),
+    *,
+    out: str | None = "BENCH_contention.json",
+) -> dict:
+    """Measured client-scaling cells: serve each backend behind an asyncio
+    :class:`~repro.core.remote.FDBServer`, hammer it with real client
+    processes, and MERGE the ``"<backend>+remote"`` cells (tagged
+    ``"measured": true``) into *out* next to whatever simulated sweep is
+    already there — the acceptance comparison reads both from one file."""
+    import os
+    import tempfile
+
+    from repro.core.remote import FDBServer
+
+    results: dict = {}
+    if out and os.path.exists(out):
+        with open(out) as f:
+            results = json.load(f)
+    results.setdefault("backends", {})
+    results.setdefault("spec", asdict(spec))
+    results["remote_procs_list"] = list(procs_list)
+
+    for backend in backends:
+        label = f"{backend}+remote"
+        rows = []
+        for n in procs_list:
+            cell = replace(spec, n_procs=n)
+            with tempfile.TemporaryDirectory() as td:
+                cfg = {"backend": backend}
+                if backend == "posix":
+                    cfg["root"] = td
+                server = FDBServer(cfg)
+                host, port = server.start()
+                try:
+                    addr = f"{host}:{port}"
+                    w = run_hammer_remote(addr, cell, "archive")
+                    r = run_hammer_remote(addr, cell, "retrieve")
+                    wire = server.wire_stats.snapshot()
+                finally:
+                    server.stop()
+            rows.append({
+                "n_procs": n, "write": w, "read": r, "measured": True,
+                "wire": {
+                    "bytes_read": wire.get("bytes_read", 0),
+                    "bytes_written": wire.get("bytes_written", 0),
+                    "connections": len(wire.get("shard_ops", {})),
+                },
+            })
+        per_proc = [row["write"]["per_proc_GiBps_mean"] for row in rows]
+        results["backends"][label] = {
+            "sweep": rows,
+            "knee_n_procs": find_knee(per_proc, list(procs_list)),
+            "measured": True,
+        }
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+    return results
+
+
 def _pow2_upto(n: int) -> list[int]:
     out = [1]
     while out[-1] * 2 <= n:
@@ -702,6 +840,12 @@ def main() -> None:
     ap.add_argument("--scaling", action="store_true",
                     help="contended client-scaling sweep (1..procs, powers of two) "
                          "through the contention model on a virtual clock")
+    ap.add_argument("--remote", action="store_true",
+                    help="MEASURED client-scaling sweep: serve each backend "
+                         "behind the asyncio FDB server and hammer it with real "
+                         "client processes (multiprocessing spawn, one RemoteFDB "
+                         "per process); '<backend>+remote' cells merge into the "
+                         "--out JSON next to any simulated sweep already there")
     ap.add_argument("--io", choices=IO_MODES, default="sync")
     ap.add_argument("--out", default="BENCH_contention.json",
                     help="output JSON for --scaling")
@@ -767,6 +911,26 @@ def main() -> None:
                     fdb.close()
             print(f"{backend:8s} {res['matched_fields']:8d} {res['present_fields']:8d} "
                   f"{res['bytes'] / (1 << 20):8.2f} {1e3 * res['seconds']:8.1f}")
+        return
+
+    if args.remote:
+        procs_list = _pow2_upto(args.procs)
+        print(f"fdb-hammer remote sweep (real processes): n_procs in {procs_list}, "
+              f"{spec.fields_per_proc} fields x {spec.field_size} B per proc\n")
+        results = remote_sweep(spec, backends=tuple(args.backends),
+                               procs_list=procs_list, out=args.out)
+        print(f"{'backend':16s} {'procs':>5s} {'write agg':>10s} {'write/proc':>11s} "
+              f"{'read/proc':>10s} {'conns':>6s}")
+        for backend in args.backends:
+            data = results["backends"][f"{backend}+remote"]
+            for row in data["sweep"]:
+                w, r = row["write"], row["read"]
+                print(f"{backend + '+remote':16s} {row['n_procs']:5d} "
+                      f"{w['agg_GiBps']:10.3f} {w['per_proc_GiBps_mean']:11.3f} "
+                      f"{r['per_proc_GiBps_mean']:10.3f} "
+                      f"{row['wire']['connections']:6d}")
+            print(f"{backend + '+remote':16s} knee at n_procs={data['knee_n_procs']}")
+        print(f"\nmerged measured cells into {args.out}")
         return
 
     if args.scaling:

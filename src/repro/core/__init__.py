@@ -13,6 +13,8 @@ Public surface:
 - :class:`SelectFDB` — tiered metadata routing (hot DAOS / cold POSIX)
 - :class:`AsyncFDB` — background writer pool + parallel batched reads
 - :class:`FDBRouter`, :func:`make_router` — multi-lane dataset sharding
+- :class:`RemoteFDB`, :class:`FDBServer` — the wire transport: any facade
+  tree served over TCP (``{"type": "remote", ...}`` in config)
 - :class:`FieldSet` — lazy MARS retrieval result with an aggregated handle
 - :mod:`repro.core.daos` — the emulated DAOS (MVCC KV/Array object store)
 - :mod:`repro.core.posix` / :mod:`repro.core.daos_backend` — the backends
@@ -42,7 +44,7 @@ from .config import (
 )
 from .datahandle import DataHandle, MemoryDataHandle
 from .fdb import FDB, make_fdb
-from .fieldset import ConcatenatedDataHandle, FieldSet
+from .fieldset import ConcatenatedDataHandle, FieldResolutionError, FieldSet
 from .keys import Key, key_union
 from .request import (
     Request,
@@ -52,6 +54,13 @@ from .request import (
     WILDCARD,
     as_request,
     as_span,
+)
+from .remote import (
+    FDBServer,
+    RemoteError,
+    RemoteFDB,
+    RemoteTimeout,
+    serve_fdb,
 )
 from .router import FDBRouter, make_router
 from .select import SelectFDB
@@ -80,6 +89,7 @@ __all__ = [
     "FDBClient",
     "WipeReport",
     "FieldSet",
+    "FieldResolutionError",
     "ConcatenatedDataHandle",
     "CODEC_HEADER_SIZE",
     "CodecError",
@@ -95,6 +105,11 @@ __all__ = [
     "AsyncFDB",
     "FDBRouter",
     "make_router",
+    "RemoteFDB",
+    "FDBServer",
+    "RemoteError",
+    "RemoteTimeout",
+    "serve_fdb",
     "FDBConfig",
     "ConfigError",
     "build_fdb",

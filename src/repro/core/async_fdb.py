@@ -40,6 +40,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import Iterator, Mapping, Sequence
 
@@ -54,6 +55,19 @@ from .schema import Schema
 __all__ = ["AsyncFDB"]
 
 _STOP = object()
+
+
+def _writer_lane(key: Key) -> int:
+    """Stable writer partition for an identifier: a crc32 of the SORTED
+    ``k=v`` items (same digest family as FDBRouter's lane hashing).  The
+    built-in ``hash()`` is PYTHONHASHSEED-randomized, which made queue
+    assignment — and the per-writer telemetry — differ run to run and
+    process to process; and Key equality is order-insensitive while
+    ``canonical()`` preserves insertion order, so sorting is what makes
+    equal keys land on the same writer (FIFO last-write-wins depends on
+    it)."""
+    canon = ",".join(f"{k}={v}" for k, v in sorted(key.items()))
+    return zlib.crc32(canon.encode("utf-8"))
 
 
 class AsyncFDB(FDBClient):
@@ -151,9 +165,24 @@ class AsyncFDB(FDBClient):
                     q.task_done()
 
     def _raise_pending(self) -> None:
+        """Drain EVERY captured writer error and raise the first, with the
+        rest attached as its ``__context__`` chain — concurrent batches can
+        fail independently, and all but one silently vanishing would hide
+        real data loss from the caller."""
         with self._err_mu:
-            if self._errors:
-                raise self._errors.pop(0)
+            if not self._errors:
+                return
+            errors, self._errors = self._errors, []
+        first, rest = errors[0], errors[1:]
+        tail = first
+        for e in rest:
+            # walk to the end of the existing chain before appending, so
+            # repeated failures never drop or cycle earlier context
+            while tail.__context__ is not None:
+                tail = tail.__context__
+            tail.__context__ = e
+            tail = e
+        raise first
 
     # ------------------------------------------------------------------ write
     def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
@@ -164,7 +193,9 @@ class AsyncFDB(FDBClient):
         self._raise_pending()
         key = self._as_key(key)
         self.schema.validate(key)  # fail fast, in the caller, not the pool
-        self._qs[hash(key) % len(self._qs)].put((key, bytes(data), time.perf_counter()))
+        self._qs[_writer_lane(key) % len(self._qs)].put(
+            (key, bytes(data), time.perf_counter())
+        )
 
     def drain(self) -> None:
         """Write barrier: block until every queued field has been archived

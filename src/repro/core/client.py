@@ -268,6 +268,22 @@ class FDBClient(abc.ABC):
         a subset wipe this API cannot do — that raises instead of silently
         deleting the whole dataset."""
         req = self._validated_request(request)
+        self._wipe_validate(req)
+        # a wipe must see everything THIS client archived — queued or
+        # unpublished fields would otherwise dodge catalogue-resolved spans
+        # (deferred-visibility backends) and dangle or survive; flushing
+        # first makes wipe-after-archive well-defined on every facade
+        self.flush()
+        ds_req = Request({k: req[k] for k in self.schema.dataset_keys})
+        report = WipeReport()
+        for ds, entries in self._wipe_targets(ds_req):
+            report = report + self._wipe_dataset(ds, entries)
+        return report
+
+    def _wipe_validate(self, req: Request) -> None:
+        """The wipe request contract, shared by every facade INCLUDING the
+        remote client (which validates before paying a network round): all
+        dataset keywords present, no narrowing span on a non-dataset one."""
         missing = [k for k in self.schema.dataset_keys if k not in req]
         if missing:
             raise KeyError(
@@ -285,16 +301,6 @@ class FDBClient(abc.ABC):
                 "carry narrowing spans that cannot be honoured — drop them "
                 "(or pass single values) to wipe the matched datasets"
             )
-        # a wipe must see everything THIS client archived — queued or
-        # unpublished fields would otherwise dodge catalogue-resolved spans
-        # (deferred-visibility backends) and dangle or survive; flushing
-        # first makes wipe-after-archive well-defined on every facade
-        self.flush()
-        ds_req = Request({k: req[k] for k in self.schema.dataset_keys})
-        report = WipeReport()
-        for ds, entries in self._wipe_targets(ds_req):
-            report = report + self._wipe_dataset(ds, entries)
-        return report
 
     def _wipe_targets(self, ds_req: Request) -> list[tuple[Key, list | None]]:
         """The dataset keys a wipe request names (with their listings when

@@ -37,6 +37,17 @@ composition of the four facades, nested arbitrarily:
     self-describing payloads lazily — a hot DAOS tier can pack at 16 bits
     while the cold POSIX archive keeps 24, declaratively per tier.
 
+``{"type": "remote", "addr": "host:port"}`` — or
+``{"type": "remote", "inner": {...}}``
+    a :class:`~repro.core.remote.RemoteFDB` reaching an FDB served in
+    another process over the wire protocol (the paper's compute-node /
+    storage-node split).  The ``addr`` form connects to a running
+    :class:`~repro.core.remote.FDBServer`; the ``inner`` form builds the
+    inner tree, serves it on a loopback socket in-process and owns both —
+    the whole composition grammar works on either side of the wire.
+    Optional transport knobs: ``pool_size``, ``timeout``, ``retries``,
+    ``backoff``.
+
 Backends are pluggable: :func:`register_backend` maps a name to a
 ``(catalogue_factory, store_factory)`` pair, so tests can register
 in-memory or fault-injecting backends and route to them from config without
@@ -288,7 +299,7 @@ register_backend(
 # Validation + JSON round-trip
 # ---------------------------------------------------------------------------
 
-_TYPES = ("local", "select", "dist", "async", "codec")
+_TYPES = ("local", "select", "dist", "async", "codec", "remote")
 
 
 def _config_type(cfg: Mapping) -> str:
@@ -354,6 +365,20 @@ def validate_config(config: Mapping) -> None:
                 f"codec nbits must be an int in [1, 32], got {nbits!r}"
             )
         validate_config(config["inner"])
+    elif t == "remote":
+        addr, inner = config.get("addr"), config.get("inner")
+        if (addr is None) == (inner is None):
+            raise ConfigError(
+                "remote config requires exactly one of 'addr' (connect to a "
+                "running server) or 'inner' (serve the inner tree in-process)"
+            )
+        if inner is not None:
+            validate_config(inner)
+        for knob, kind in (("pool_size", int), ("retries", int),
+                           ("timeout", (int, float)), ("backoff", (int, float))):
+            v = config.get(knob)
+            if v is not None and (not isinstance(v, kind) or isinstance(v, bool)):
+                raise ConfigError(f"remote {knob!r} must be a number, got {v!r}")
 
 
 def _jsonable(obj, path: str = "$"):
@@ -478,6 +503,8 @@ def build_fdb(config: Mapping) -> FDBClient:
         return _build_dist(config)
     if t == "codec":
         return _build_codec(config)
+    if t == "remote":
+        return _build_remote(config)
     return _build_async(config)
 
 
@@ -592,6 +619,41 @@ def _build_codec(cfg: Mapping) -> FDBClient:
         owns = cfg.get("owns_inner", not isinstance(inner_cfg, FDBClient))
         return CodecFDB(inner, nbits=cfg.get("nbits", 16), owns_inner=owns)
     except BaseException:
+        _close_built([inner_cfg], [inner])
+        raise
+
+
+def _build_remote(cfg: Mapping) -> FDBClient:
+    from .remote import FDBServer, RemoteFDB
+
+    kw = {
+        k: cfg[k]
+        for k in ("pool_size", "timeout", "retries", "backoff")
+        if k in cfg
+    }
+    if cfg.get("addr") is not None:
+        return RemoteFDB(cfg["addr"], **kw)
+    # self-hosted: build the inner tree, serve it on a loopback socket and
+    # hand the server to the client — one close() tears everything down.
+    # A prebuilt pass-through inner stays caller-owned (the server flushes
+    # it on stop but does not close it), same rule as async/codec tiers.
+    inner_cfg = cfg["inner"]
+    inner = build_fdb(inner_cfg)
+    server = None
+    try:
+        owns = cfg.get("owns_inner", not isinstance(inner_cfg, FDBClient))
+        server = FDBServer(
+            inner,
+            host=cfg.get("host", "127.0.0.1"),
+            port=cfg.get("port", 0),
+            owns_fdb=owns,
+        )
+        server.start()
+        return RemoteFDB(server=server, **kw)
+    except BaseException:
+        if server is not None:
+            server._owns_fdb = False  # close the inner exactly once, below
+            server.stop()
         _close_built([inner_cfg], [inner])
         raise
 

@@ -19,7 +19,30 @@ from typing import Callable, Iterator, Sequence
 from .datahandle import DataHandle
 from .keys import Key
 
-__all__ = ["FieldSet", "ConcatenatedDataHandle"]
+__all__ = ["FieldSet", "FieldResolutionError", "ConcatenatedDataHandle"]
+
+
+class FieldResolutionError(RuntimeError):
+    """A FieldSet's fetch returned the wrong number of handles.
+
+    Absent fields are ``None`` entries in a CORRECTLY-sized result; a short
+    (or long) result means the fetch itself misbehaved — a torn network
+    response, a buggy fan-out — and zipping it would silently leave
+    positions stuck at the unresolved sentinel, surfacing much later as a
+    bogus handle.  Fail here instead, naming the keys."""
+
+    def __init__(self, expected: int, got: int, keys: Sequence[Key]):
+        shown = ", ".join(k.canonical() for k in keys[:5])
+        if len(keys) > 5:
+            shown += f", ... ({len(keys) - 5} more)"
+        super().__init__(
+            f"fetch returned {got} handles for {expected} requested keys "
+            f"[{shown}] — absent fields must come back as None entries, "
+            "never as a short result"
+        )
+        self.expected = expected
+        self.got = got
+        self.keys = tuple(keys)
 
 
 class FieldSet:
@@ -58,9 +81,17 @@ class FieldSet:
             lo = (i // self._batch) * self._batch
             hi = min(lo + self._batch, len(self._keys))
             idxs = [j for j in range(lo, hi) if self._handles[j] is ...]
-            got = self._fetch([self._keys[j] for j in idxs])
-            for j, h in zip(idxs, got):
-                self._handles[j] = h
+            self._resolve(idxs)
+
+    def _resolve(self, idxs: list[int]) -> None:
+        """Fetch the given positions and store the handles — after checking
+        the fetch honoured its contract (exactly one handle per key)."""
+        keys = [self._keys[j] for j in idxs]
+        got = list(self._fetch(keys))
+        if len(got) != len(idxs):
+            raise FieldResolutionError(len(idxs), len(got), keys)
+        for j, h in zip(idxs, got):
+            self._handles[j] = h
 
     def _ensure_all(self) -> None:
         """Resolve every unresolved key in ONE fetch — a caller asking for
@@ -71,9 +102,7 @@ class FieldSet:
             idxs = [j for j, h in enumerate(self._handles) if h is ...]
             if not idxs:
                 return
-            got = self._fetch([self._keys[j] for j in idxs])
-            for j, h in zip(idxs, got):
-                self._handles[j] = h
+            self._resolve(idxs)
 
     # -------------------------------------------------------------- container
     @property

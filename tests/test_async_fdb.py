@@ -193,6 +193,80 @@ class TestAsyncFDB:
         with pytest.raises(RuntimeError, match="backend down"):
             afdb.flush()
 
+    def test_concurrent_writer_failures_all_surface(self, tmp_path):
+        """Two writers failing INDEPENDENTLY: one flush must report both —
+        the old code raised errors[0] and silently dropped the rest, hiding
+        real data loss from the caller."""
+        from repro.core.async_fdb import _writer_lane
+
+        fdb = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "f"))
+
+        def boom(items):
+            raise RuntimeError(f"lane-fail step={items[0][0]['step']}")
+
+        fdb.archive_batch = boom
+        # pick two keys that land on DIFFERENT writer queues
+        ka = example_key(step="0")
+        kb = next(example_key(step=str(s)) for s in range(1, 64)
+                  if _writer_lane(example_key(step=str(s))) % 2
+                  != _writer_lane(ka) % 2)
+        afdb = AsyncFDB(fdb, writers=2, batch_size=1)
+        afdb.archive(ka, b"a")
+        afdb.archive(kb, b"b")
+        with pytest.raises(RuntimeError, match="lane-fail") as ei:
+            afdb.flush()
+        # walk the __context__ chain: BOTH failures are attached
+        msgs, e = [], ei.value
+        while e is not None:
+            msgs.append(str(e))
+            e = e.__context__
+        assert f"lane-fail step={ka['step']}" in msgs
+        assert f"lane-fail step={kb['step']}" in msgs
+        # the error list was drained: the next barrier is clean
+        del fdb.archive_batch
+        afdb.close()
+
+
+class TestWriterLane:
+    """The stable digest partitioning (satellite 3): queue assignment must
+    not depend on PYTHONHASHSEED or on key insertion order."""
+
+    def test_insertion_order_insensitive(self):
+        from repro.core.async_fdb import _writer_lane
+
+        k = example_key()
+        reordered = Key(dict(reversed(list(dict(k).items()))))
+        assert k == reordered  # Key equality is order-insensitive...
+        assert _writer_lane(k) == _writer_lane(reordered)  # ...so lanes must be
+
+    def test_stable_across_hash_seeds(self):
+        """hash() is PYTHONHASHSEED-randomized process to process; the lane
+        digest must not be — run the computation under two different seeds
+        and against this process."""
+        import os
+        import subprocess
+        import sys
+        from pathlib import Path
+
+        import repro.core as _core
+        from repro.core.async_fdb import _writer_lane
+
+        code = (
+            "from repro.core.async_fdb import _writer_lane;"
+            "from repro.core import Key;"
+            "print(_writer_lane(Key({'class':'od','step':'3','param':'u'})))"
+        )
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(Path(_core.__file__).resolve().parents[2])
+        digests = []
+        for seed in ("0", "1"):
+            env["PYTHONHASHSEED"] = seed
+            out = subprocess.run([sys.executable, "-c", code], env=env,
+                                 capture_output=True, text=True, check=True)
+            digests.append(int(out.stdout.strip()))
+        here = _writer_lane(Key({"class": "od", "step": "3", "param": "u"}))
+        assert digests == [here, here]
+
     @pytest.mark.parametrize("backend", ["daos", "posix"])
     def test_retrieve_many_parallel_fanout(self, backend, tmp_path):
         writer, reader = make_pair(backend, tmp_path)

@@ -1,0 +1,561 @@
+"""RemoteFDB wire-transport tests.
+
+Covers the protocol layer (framing, truncation, version checks), full
+client round-trips on both backends, the fault paths the ISSUE names
+(server kill mid-request, client timeout, retry-with-backoff), wire-level
+request batching on the server, the declarative ``{"type": "remote"}``
+config node, and — by subclassing the equivalence suite from
+``test_select`` — the property that a SelectFDB tree with one remote tier
+is observationally identical to the bare backend.
+
+Plus the satellite regression: a FieldSet fetch returning the wrong number
+of handles fails loudly naming the keys (it used to zip short and leave
+unresolved sentinels behind), which matters once fetches cross a network
+hop.
+"""
+
+import socket
+import threading
+import time
+
+import pytest
+
+import test_select
+from repro.core import (
+    AsyncFDB,
+    FDBConfig,
+    FDBServer,
+    FieldResolutionError,
+    FieldSet,
+    Key,
+    NWP_SCHEMA_POSIX,
+    RemoteError,
+    RemoteFDB,
+    RemoteTimeout,
+    SelectFDB,
+    UnknownKeywordError,
+    build_fdb,
+    make_fdb,
+    serve_fdb,
+)
+from repro.core.remote import ProtocolError
+from repro.core.remote import protocol as P
+from repro.core.request import Request
+from test_select import dataset_req, ident, make_bare, populate
+
+
+@pytest.fixture
+def servers():
+    """Track servers started by a test; stop them on teardown."""
+    started: list[FDBServer] = []
+    yield started
+    for s in started:
+        s.stop()
+
+
+def start_server(servers, backend, tmp_path, tag="srv", **kw) -> FDBServer:
+    server = FDBServer(make_bare(backend, tmp_path, tag), owns_fdb=True, **kw)
+    server.start()
+    servers.append(server)
+    return server
+
+
+def connect(server: FDBServer, **kw) -> RemoteFDB:
+    host, port = server.addr
+    return RemoteFDB(f"{host}:{port}", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Protocol layer
+# ---------------------------------------------------------------------------
+
+class TestProtocol:
+    def test_frame_roundtrip(self):
+        frame = P.encode_frame(7, P.Op.FLUSH, b"xyz")
+        n = P.frame_length(frame[:4])
+        assert n == len(frame) - 4
+        req_id, opcode, cur = P.split_frame(frame[4:])
+        assert (req_id, opcode) == (7, P.Op.FLUSH)
+        assert cur._take(3, "payload") == b"xyz"
+        cur.expect_end()
+
+    def test_oversized_frame_rejected_without_allocation(self):
+        hdr = (1 << 29).to_bytes(4, "big")
+        with pytest.raises(ProtocolError, match="exceeds"):
+            P.frame_length(hdr, max_frame=1 << 20)
+
+    def test_cursor_truncation_names_what_was_expected(self):
+        cur = P.Cursor(b"\x00\x00\x00\x10short")
+        with pytest.raises(ProtocolError, match="key"):
+            cur.str_("key")
+
+    def test_trailing_bytes_rejected(self):
+        cur = P.Cursor(b"\x01extra")
+        cur.u8()
+        with pytest.raises(ProtocolError, match="trailing"):
+            cur.expect_end()
+
+    def test_hello_version_and_magic(self):
+        P.decode_hello(P.Cursor(P.encode_hello()))
+        with pytest.raises(ProtocolError, match="magic"):
+            P.decode_hello(P.Cursor(b"XXXX\x00\x01"))
+        bad = P.MAGIC + (P.PROTOCOL_VERSION + 1).to_bytes(2, "big")
+        with pytest.raises(ProtocolError, match="version"):
+            P.decode_hello(P.Cursor(bad))
+
+    def test_archive_batch_roundtrip(self):
+        items = [(ident(step=str(s)), bytes([s]) * 10) for s in range(3)]
+        back = P.decode_archive_batch(P.Cursor(P.encode_archive_batch(items)))
+        assert back == items
+
+    def test_request_roundtrip_preserves_spans(self):
+        req = Request.parse("retrieve,step=0/to/12/by/6,param=*,number=1/2")
+        back = P.decode_request(P.Cursor(P.encode_request(req)))
+        assert back.format() == req.format()
+
+    def test_fieldset_and_handles_roundtrip_with_absent(self):
+        payloads = [b"abc", None, b""]
+        assert P.decode_handles(P.Cursor(P.encode_handles(payloads))) == payloads
+        items = [(ident(), b"x"), (ident(step="9"), None)]
+        assert P.decode_fieldset(P.Cursor(P.encode_fieldset(items))) == items
+
+    def test_error_roundtrip(self):
+        err = P.decode_error(P.Cursor(P.encode_error(KeyError("missing thing"))))
+        assert isinstance(err, RemoteError)
+        assert err.remote_type == "KeyError"
+        assert "missing thing" in str(err)
+
+    def test_remote_timeout_is_both_remote_error_and_timeout(self):
+        e = RemoteTimeout("too slow")
+        assert isinstance(e, RemoteError) and isinstance(e, TimeoutError)
+
+
+# ---------------------------------------------------------------------------
+# Round trips on both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["posix", "daos"])
+class TestRemoteRoundTrip:
+    def test_archive_flush_read(self, backend, tmp_path, servers):
+        server = start_server(servers, backend, tmp_path)
+        with connect(server) as fdb:
+            keys = populate(fdb)
+            for i, k in enumerate(keys):
+                assert fdb.read(k) == f"payload-{i}".encode()
+            assert fdb.read(ident(param="zz")) is None
+
+    def test_retrieve_batch_preserves_order_and_absent(self, backend, tmp_path, servers):
+        server = start_server(servers, backend, tmp_path)
+        with connect(server) as fdb:
+            items = [(ident(step=str(s)), f"s{s}".encode()) for s in range(3)]
+            fdb.archive_batch(items)
+            fdb.flush()
+            keys = [k for k, _ in items][::-1] + [ident(param="zz")]
+            handles = fdb.retrieve_batch(keys)
+            assert handles[-1] is None
+            assert [h.read() for h in handles[:-1]] == [b"s2", b"s1", b"s0"]
+
+    def test_retrieve_many_full_and_partial(self, backend, tmp_path, servers):
+        server = start_server(servers, backend, tmp_path)
+        with connect(server) as fdb:
+            populate(fdb)
+            full = dict(ident())
+            full.update(step=["0", "1"], param=["2t", "10u"], number=["0", "1"])
+            fs = fdb.retrieve_many(full)
+            assert len(fs) == 8 and not fs.missing()
+            partial = fdb.retrieve_many(Request.parse("step=0/to/2,param=*")).read_all()
+            assert len(partial) == 12
+            assert all(v is not None for v in partial.values())
+
+    def test_list_and_wipe(self, backend, tmp_path, servers):
+        server = start_server(servers, backend, tmp_path)
+        with connect(server) as fdb:
+            populate(fdb)
+            assert len(list(fdb.list({"step": "1"}))) == 4
+            report = fdb.wipe(dataset_req())
+            assert report.entries_removed == 12
+            assert report.datasets == ("od:oper:0001:20240603:1200",)
+            assert list(fdb.list({})) == []
+
+    def test_validation_happens_client_side(self, backend, tmp_path, servers):
+        server = start_server(servers, backend, tmp_path)
+        with connect(server) as fdb:
+            before = dict(fdb.wire_stats.snapshot()["ops"])
+            with pytest.raises(KeyError):
+                fdb.archive(Key({"class": "od"}), b"x")  # missing keywords
+            with pytest.raises(UnknownKeywordError):
+                fdb.retrieve_many({"bogus_keyword": "1"})
+            with pytest.raises(KeyError, match="dataset keywords"):
+                fdb.wipe({"class": "od"})
+            with pytest.raises(ValueError, match="narrowing"):
+                fdb.wipe({**dataset_req(), "step": "0/to/2"})
+            # none of those paid a wire round
+            assert dict(fdb.wire_stats.snapshot()["ops"]) == before
+
+    def test_server_side_error_travels_as_remote_error(self, backend, tmp_path, servers):
+        server = start_server(servers, backend, tmp_path)
+        server.fdb.flush = _boom  # server-side failure, not transport
+        with connect(server, retries=2) as fdb_raises:
+            before = fdb_raises.wire_stats.snapshot()["ops"].get("remote_retry", 0)
+            with pytest.raises(RemoteError, match="synthetic server failure"):
+                fdb_raises.flush()
+            # an application error must never be retried
+            after = fdb_raises.wire_stats.snapshot()["ops"].get("remote_retry", 0)
+            assert after == before
+            del server.fdb.flush  # restore for close()
+
+    def test_wire_telemetry_both_sides(self, backend, tmp_path, servers):
+        server = start_server(servers, backend, tmp_path)
+        with connect(server) as fdb:
+            populate(fdb)
+            fdb.read(ident())
+            client_ops = fdb.wire_stats.snapshot()["ops"]
+            assert client_ops["archive_batch"] >= 1
+            assert client_ops["flush"] >= 1
+            assert client_ops["retrieve_batch"] >= 1
+            snap = server.wire_stats.snapshot()
+            assert snap["ops"]["wire_archive_batch"] >= 1
+            assert snap["bytes_read"] > 0  # wire bytes in
+            assert snap["shard_ops"], "per-connection shards missing"
+            stats = fdb.server_stats()
+            assert "server" in stats and "wire" in stats
+
+    def test_stats_roundtrip_merges_backend_telemetry(self, backend, tmp_path, servers):
+        server = start_server(servers, backend, tmp_path)
+        with connect(server) as fdb:
+            populate(fdb)
+            assert fdb.server_stats()["server"].get("bytes_written", 0) > 0
+
+
+def _boom():
+    raise RuntimeError("synthetic server failure")
+
+
+# ---------------------------------------------------------------------------
+# Fault paths
+# ---------------------------------------------------------------------------
+
+class TestFaults:
+    def test_connect_to_dead_port_fails_bounded(self, tmp_path):
+        # grab a port with no listener behind it
+        s = socket.socket()
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+        s.close()
+        t0 = time.perf_counter()
+        with pytest.raises(OSError):
+            RemoteFDB(f"127.0.0.1:{port}", retries=1, backoff=0.01, timeout=1.0)
+        assert time.perf_counter() - t0 < 10.0
+
+    def test_client_timeout_surfaces_as_remote_timeout(self, tmp_path, servers):
+        gate = threading.Event()
+        server = start_server(servers, "posix", tmp_path)
+        server.fdb.flush = gate.wait  # wedge the op server-side
+        try:
+            with pytest.raises(RemoteTimeout):
+                fdb = connect(server, timeout=0.4, retries=0)
+                try:
+                    fdb.flush()
+                finally:
+                    fdb._closed = True  # skip close()'s flush on the wedged server
+        finally:
+            gate.set()
+            del server.fdb.flush
+
+    def test_timeout_retry_with_backoff_is_bounded(self, tmp_path, servers):
+        """retry-with-backoff on timeout: every attempt times out, the call
+        fails after exactly retries+1 attempts, and the retries show up in
+        the wire telemetry."""
+        gate = threading.Event()
+        server = start_server(servers, "posix", tmp_path)
+        server.fdb.flush = gate.wait
+        try:
+            fdb = connect(server, timeout=0.3, retries=2, backoff=0.01)
+            t0 = time.perf_counter()
+            with pytest.raises(RemoteTimeout, match="after 3 attempts"):
+                fdb.flush()
+            assert time.perf_counter() - t0 < 5.0
+            assert fdb.wire_stats.snapshot()["ops"]["remote_retry"] == 2
+            fdb._closed = True
+        finally:
+            gate.set()
+            del server.fdb.flush
+
+    def test_retry_recovers_from_torn_connection(self, tmp_path, servers):
+        """A dead pooled socket (server restarted, LB reset, ...) must cost
+        one retry, not a failure: the op re-sends on a fresh connection."""
+        server = start_server(servers, "posix", tmp_path)
+        fdb = connect(server, pool_size=1, retries=2, backoff=0.01)
+        populate(fdb)
+        # tear the pooled connection under the client
+        conn = fdb._pool.get()
+        conn.sock.shutdown(socket.SHUT_RDWR)
+        conn.sock.close()
+        fdb._pool.put(conn)
+        assert fdb.read(ident()) == b"payload-0"  # retried transparently
+        assert fdb.wire_stats.snapshot()["ops"]["remote_retry"] >= 1
+        assert fdb.wire_stats.snapshot()["ops"]["remote_connect"] >= 2
+        fdb.close()
+
+    def test_server_kill_mid_request_is_clean_error_not_hang(self, tmp_path):
+        """Stopping the server while a request is in flight must surface a
+        transport error to the client promptly — never a hang."""
+        gate = threading.Event()
+        inner = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "k"))
+        inner.flush = gate.wait  # the in-flight op never completes
+        server = FDBServer(inner)
+        server.start()
+        fdb = connect(server, timeout=30.0, retries=0)
+        outcome: list = []
+
+        def call():
+            try:
+                fdb.flush()
+                outcome.append("returned")
+            except Exception as e:  # noqa: BLE001 — the assertion target
+                outcome.append(e)
+
+        t = threading.Thread(target=call)
+        t.start()
+        time.sleep(0.3)  # let the flush frame reach the wedged server
+        server.stop()
+        t.join(timeout=10)
+        gate.set()
+        assert not t.is_alive(), "client hung after server kill"
+        assert len(outcome) == 1 and isinstance(outcome[0], (OSError, ProtocolError)), outcome
+        fdb._closed = True
+
+    def test_duplicate_hello_rejected_but_connection_survives_app_errors(
+        self, tmp_path, servers
+    ):
+        server = start_server(servers, "posix", tmp_path)
+        with connect(server, pool_size=1) as fdb:
+            conn = fdb._pool.get()
+            op, cur, _ = conn.call(99, P.Op.HELLO, P.encode_hello())
+            assert op == P.Op.ERR
+            assert "handshake" in str(P.decode_error(cur))
+            fdb._pool.put(conn)
+            fdb.flush()  # same pool still serves real ops
+
+
+# ---------------------------------------------------------------------------
+# Wire-level batching + backpressure (raw pipelined client)
+# ---------------------------------------------------------------------------
+
+class _RawClient:
+    """A protocol-speaking socket that can pipeline frames — the pooled
+    RemoteFDB never pipelines on one connection, so the server's coalescing
+    and backpressure paths need a raw client to exercise them."""
+
+    def __init__(self, addr):
+        self.sock = socket.create_connection(addr, timeout=30)
+        self.sock.sendall(P.encode_frame(0, P.Op.HELLO, P.encode_hello()))
+        req_id, op, _ = self.recv()
+        assert (req_id, op) == (0, P.Op.OK)
+
+    def send(self, req_id, opcode, payload=b""):
+        self.sock.sendall(P.encode_frame(req_id, opcode, payload))
+
+    def recv(self):
+        buf = b""
+        while len(buf) < 4:
+            buf += self.sock.recv(4 - len(buf))
+        n = P.frame_length(buf)
+        body = b""
+        while len(body) < n:
+            body += self.sock.recv(n - len(body))
+        return P.split_frame(body)
+
+    def close(self):
+        self.sock.close()
+
+
+class TestWireBatching:
+    def test_pipelined_archives_coalesce_into_one_backend_batch(
+        self, tmp_path, servers
+    ):
+        server = start_server(servers, "posix", tmp_path, coalesce=16)
+        gate = threading.Event()
+        real_list = server.fdb.list
+        server.fdb.list = lambda req: (gate.wait(10), real_list(req))[1]
+        calls: list[int] = []
+        inner_archive = server.fdb.archive_batch
+        server.fdb.archive_batch = lambda items: (
+            calls.append(len(items)), inner_archive(items))[-1]
+        raw = _RawClient(server.addr)
+        n = 6
+        # wedge the worker on a gated LIST so every archive frame is queued
+        # behind it by the time the worker gets to them
+        raw.send(1, P.Op.LIST, P.encode_request(Request({"step": "0"})))
+        for i in range(n):
+            items = [(ident(step=str(i), param=p), f"{i}{p}".encode())
+                     for p in ("2t", "10u")]
+            raw.send(10 + i, P.Op.ARCHIVE_BATCH, P.encode_archive_batch(items))
+        raw.send(99, P.Op.FLUSH)
+        time.sleep(0.3)  # reader drains the socket into the frame queue
+        gate.set()
+        got = {}
+        for _ in range(n + 2):
+            req_id, op, _ = raw.recv()
+            got[req_id] = op
+        raw.close()
+        assert got == {1: P.Op.OK, 99: P.Op.OK,
+                       **{10 + i: P.Op.OK for i in range(n)}}
+        # all n queued frames merged into ONE backend archive_batch round
+        assert calls == [n * 2]
+        assert server.wire_stats.snapshot()["ops"].get("wire_coalesced_frames", 0) >= 1
+        del server.fdb.list
+        server.fdb.archive_batch = inner_archive
+        with connect(server) as check:
+            check.flush()
+            assert check.read(ident(step="3")) == b"32t"
+
+    def test_bounded_inflight_queue_does_not_deadlock(self, tmp_path, servers):
+        server = start_server(servers, "posix", tmp_path, max_inflight=2)
+        raw = _RawClient(server.addr)
+        n = 20
+        for i in range(n):
+            raw.send(i, P.Op.ARCHIVE_BATCH,
+                     P.encode_archive_batch([(ident(step=str(i)), b"x")]))
+        oks = 0
+        for _ in range(n):
+            _, op, _ = raw.recv()
+            oks += op == P.Op.OK
+        raw.close()
+        assert oks == n
+
+    def test_garbage_bytes_get_protocol_error(self, tmp_path, servers):
+        server = start_server(servers, "posix", tmp_path)
+        sock = socket.create_connection(server.addr, timeout=10)
+        sock.sendall(b"GET / HTTP/1.1\r\n\r\n" + b"\x00" * 64)
+        # server answers with an ERR frame (or closes) instead of hanging
+        data = sock.recv(1 << 16)
+        sock.close()
+        if data:
+            _, op, cur = P.split_frame(data[4:])
+            assert op == P.Op.ERR
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: SelectFDB with one remote tier == bare backend
+# ---------------------------------------------------------------------------
+
+class TestRemoteRoutingEquivalence(test_select.TestRoutingEquivalence):
+    """The existing single-rule equivalence suite, with the routed side's
+    tier moved BEHIND the wire: SelectFDB -> RemoteFDB -> server -> backend
+    must stay observationally identical to the bare backend."""
+
+    @pytest.fixture(autouse=True)
+    def _track_servers(self):
+        self._servers: list[FDBServer] = []
+        yield
+        for s in self._servers:
+            s.stop()
+
+    def _pair(self, backend, tmp_path):
+        bare = make_bare(backend, tmp_path, "bare")
+        server = FDBServer(make_bare(backend, tmp_path, "routed"), owns_fdb=True)
+        server.start()
+        self._servers.append(server)
+        host, port = server.addr
+        routed = SelectFDB([("class=od", RemoteFDB(f"{host}:{port}"))])
+        return bare, routed
+
+
+# ---------------------------------------------------------------------------
+# Declarative config + composition
+# ---------------------------------------------------------------------------
+
+class TestRemoteConfig:
+    def test_inner_form_builds_self_hosted_tree(self, tmp_path):
+        cfg = {"type": "remote",
+               "inner": {"backend": "posix", "root": str(tmp_path / "r")}}
+        FDBConfig(cfg)  # validates + JSON round-trips
+        assert FDBConfig.from_json(FDBConfig(cfg).to_json()) == cfg
+        with build_fdb(cfg) as fdb:
+            assert isinstance(fdb, RemoteFDB)
+            fdb.archive(ident(), b"x")
+            fdb.flush()
+            assert fdb.read(ident()) == b"x"
+
+    def test_addr_form_connects_to_running_server(self, tmp_path, servers):
+        server = start_server(servers, "daos", tmp_path)
+        host, port = server.addr
+        with build_fdb({"type": "remote", "addr": f"{host}:{port}",
+                        "pool_size": 1, "retries": 1}) as fdb:
+            fdb.archive(ident(), b"via-config")
+            fdb.flush()
+            assert fdb.read(ident()) == b"via-config"
+
+    def test_validation_rejects_malformed_nodes(self):
+        from repro.core import ConfigError
+        from repro.core.config import validate_config
+
+        with pytest.raises(ConfigError, match="exactly one"):
+            validate_config({"type": "remote"})
+        with pytest.raises(ConfigError, match="exactly one"):
+            validate_config({"type": "remote", "addr": "h:1",
+                            "inner": {"backend": "posix", "root": "/x"}})
+        with pytest.raises(ConfigError, match="pool_size"):
+            validate_config({"type": "remote", "addr": "h:1", "pool_size": "big"})
+
+    def test_async_over_remote_composes(self, tmp_path):
+        cfg = {"type": "async", "writers": 2,
+               "inner": {"type": "remote",
+                         "inner": {"backend": "posix", "root": str(tmp_path / "a")}}}
+        with build_fdb(cfg) as fdb:
+            assert isinstance(fdb, AsyncFDB)
+            items = [(ident(step=str(s), param=p), f"{s}{p}".encode())
+                     for s in range(3) for p in ("2t", "10u")]
+            for k, v in items:
+                fdb.archive(k, v)
+            fdb.flush()
+            for k, v in items:
+                assert fdb.read(k) == v
+
+    def test_serve_fdb_convenience_and_bad_addr(self, tmp_path):
+        server = serve_fdb(make_bare("posix", tmp_path, "sv"))
+        try:
+            assert server.addr is not None
+        finally:
+            server.stop()
+        with pytest.raises(ValueError, match="host:port"):
+            RemoteFDB("not-an-address")
+
+
+# ---------------------------------------------------------------------------
+# Satellite regression: FieldSet fetch-contract validation
+# ---------------------------------------------------------------------------
+
+class TestFieldResolution:
+    KEYS = [ident(step=str(s)) for s in range(4)]
+
+    def test_short_fetch_raises_naming_keys(self):
+        fs = FieldSet(self.KEYS, lambda ks: [None] * (len(ks) - 1),
+                      batch_size=None)
+        with pytest.raises(FieldResolutionError, match="step=0") as ei:
+            fs.handles()
+        assert ei.value.expected == 4 and ei.value.got == 3
+        assert "4 requested keys" in str(ei.value)
+
+    def test_long_fetch_also_rejected(self):
+        fs = FieldSet(self.KEYS, lambda ks: [None] * (len(ks) + 2),
+                      batch_size=None)
+        with pytest.raises(FieldResolutionError):
+            fs.handles()
+
+    def test_chunked_path_validates_too(self):
+        fs = FieldSet(self.KEYS, lambda ks: [], batch_size=2)
+        with pytest.raises(FieldResolutionError, match="fetch returned 0"):
+            fs[self.KEYS[0]]
+
+    def test_key_list_is_truncated_in_message(self):
+        keys = [ident(step=str(s)) for s in range(10)]
+        fs = FieldSet(keys, lambda ks: [], batch_size=None)
+        with pytest.raises(FieldResolutionError, match="5 more"):
+            fs.handles()
+
+    def test_correct_fetch_with_absent_fields_still_fine(self):
+        fs = FieldSet(self.KEYS, lambda ks: [None] * len(ks), batch_size=2)
+        assert fs.handles() == [None] * 4
+        assert fs.missing() == self.KEYS
