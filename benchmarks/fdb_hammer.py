@@ -187,6 +187,24 @@ def make_backend(
     return fdb
 
 
+def _trace_cell(fdb, label: str, sink: list | None, clock=None):
+    """Install a fresh tracer (wall clock by default, a contention model's
+    virtual clock in the scaling sweep) on one cell's FDB tree.  Returns a
+    drain callback appending the finished spans — tagged with the cell
+    label as their process — to *sink*; a no-op when tracing is off."""
+    if sink is None:
+        return lambda: None
+    from repro.obs import Tracer, install_tracer
+
+    tr = Tracer(proc=label, clock=clock or time.perf_counter)
+    install_tracer(fdb, tr)
+
+    def drain() -> None:
+        sink.extend(s.to_dict() for s in tr.drain())
+
+    return drain
+
+
 def _field_key(member: int, step: int, param: int, level: int, n_datasets: int = 1) -> Key:
     date = str(20240601 + member % max(1, n_datasets))
     return Key(
@@ -317,7 +335,8 @@ def run_hammer(fdb, spec: HammerSpec, mode: str) -> dict:
     return res
 
 
-def sweep(spec: HammerSpec, backends=("daos", "posix"), lanes_sweep=(1, 2)) -> list[dict]:
+def sweep(spec: HammerSpec, backends=("daos", "posix"), lanes_sweep=(1, 2),
+          trace_sink: list | None = None) -> list[dict]:
     """Run the same spec through every io mode and lane count on each
     backend (fresh backend per cell), archive then retrieve."""
     import tempfile
@@ -330,10 +349,12 @@ def sweep(spec: HammerSpec, backends=("daos", "posix"), lanes_sweep=(1, 2)) -> l
                 with tempfile.TemporaryDirectory() as td:
                     fdb = make_backend(backend, root=td, engine=None, lanes=lanes,
                                        codec_nbits=spec.codec_nbits)
+                    drain = _trace_cell(fdb, f"{backend}-l{lanes}-{io}", trace_sink)
                     try:
                         w = run_hammer(fdb, cell, "archive")
                         r = run_hammer(fdb, cell, "retrieve")
                     finally:
+                        drain()
                         fdb.close()
                 row = {"backend": backend, "lanes": lanes, "io": io,
                        "write_GiBps": w["bandwidth_GiBps"],
@@ -446,7 +467,8 @@ def _fill_posix_roots(cfg, scratch: str, counter: list | None = None,
     return cfg
 
 
-def run_config(config: dict, spec: HammerSpec, io_modes=IO_MODES) -> list[dict]:
+def run_config(config: dict, spec: HammerSpec, io_modes=IO_MODES,
+               trace_sink: list | None = None) -> list[dict]:
     """Sweep one config-built FDB through the I/O modes: fresh tree +
     scratch roots per cell, archive then retrieve then a listing, with the
     per-tier/per-lane telemetry breakdown when the tree exposes one."""
@@ -459,12 +481,14 @@ def run_config(config: dict, spec: HammerSpec, io_modes=IO_MODES) -> list[dict]:
         with tempfile.TemporaryDirectory() as td:
             cfg = _fill_posix_roots(copy.deepcopy(config), td)
             with build_fdb(cfg) as fdb:
+                drain = _trace_cell(fdb, f"config-{io}", trace_sink)
                 for s in fdb.io_stats():
                     s.reset()  # a config may still name a shared/global sink
                 w = run_hammer(fdb, cell, "archive")
                 r = run_hammer(fdb, cell, "retrieve")
                 n_step0 = sum(1 for _ in fdb.list({"step": "0"}))
                 snap = fdb.stats_snapshot()
+                drain()
         parts = snap.get("tiers") or snap.get("lanes") or []
         row = {
             "io": io,
@@ -629,6 +653,7 @@ def scaling_sweep(
     virtual: bool = True,
     out: str | None = "BENCH_contention.json",
     codec_nbits: int | None = None,
+    trace_sink: list | None = None,
 ) -> dict:
     """The paper's client-scaling experiment: fresh backend + contention
     model per cell, archive then retrieve, per-proc and aggregate bandwidth
@@ -663,6 +688,12 @@ def scaling_sweep(
                 stats = PosixStats(name=f"{label}-x{n}") if backend == "posix" else None
                 fdb = make_backend(backend, root=td, engine=None, stats=stats,
                                    contention=model, codec_nbits=nbits)
+                # spans ride the MODEL's clock: each quantum runs bound to
+                # one emulated client, so span times are that client's
+                # virtual seconds — the exported trace shows the contended
+                # schedule, not the (meaningless) wall time of the simulator
+                drain = _trace_cell(fdb, f"{label}-x{n}", trace_sink,
+                                    clock=lambda m=model: m.client().t)
                 try:
                     w = run_hammer_contended(fdb, cell, "archive", model)
                     w["latency"] = _latency_summary(fdb.stats_snapshot())
@@ -676,6 +707,7 @@ def scaling_sweep(
                     r = run_hammer_contended(fdb, cell, "retrieve", model)
                     r["latency"] = _latency_summary(fdb.stats_snapshot())
                 finally:
+                    drain()
                     fdb.close()
             rows.append({"n_procs": n, "write": w, "read": r})
         per_proc = [row["write"]["per_proc_GiBps_mean"] for row in rows]
@@ -709,6 +741,9 @@ def _remote_proc_worker(addr: str, spec_kw: dict, member: int, mode: str):
 
     fdb = RemoteFDB(addr, timeout=300.0)
     try:
+        # deliberately time.time(), NOT time.perf_counter(): perf_counter
+        # epochs are per-process and these timestamps are differenced
+        # across processes in run_hammer_remote
         t0 = time.time()
         for step in range(spec.n_steps):
             keys = _step_keys(spec, member, step)
@@ -861,6 +896,12 @@ def main() -> None:
                          "POSIX) select config, 'tiered-codec' the same with "
                          "per-tier GRIB codec widths, otherwise inline JSON or "
                          "a path to a JSON file (posix roots are auto-filled)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="collect distributed-trace spans from every cell "
+                         "(wall clock; --scaling uses the contention model's "
+                         "virtual clock) and write one Chrome trace-event "
+                         "JSON — load it in Perfetto / chrome://tracing; "
+                         "applies to the plain sweep, --config and --scaling")
     ap.add_argument("--codec-nbits", type=int, default=None, metavar="N",
                     help="drive the GRIB codec path: archive float32 fields "
                          "through archive_fields (one grib_pack launch per "
@@ -872,6 +913,14 @@ def main() -> None:
     spec = HammerSpec(n_procs=args.procs, n_steps=args.steps, n_params=args.params,
                       n_levels=args.levels, field_size=args.field_size, io=args.io,
                       codec_nbits=args.codec_nbits)
+    trace_sink: list | None = [] if args.trace else None
+
+    def publish_trace() -> None:
+        if args.trace and trace_sink is not None:
+            from repro.obs import write_chrome_trace
+
+            n = write_chrome_trace(args.trace, trace_sink)
+            print(f"wrote {n} trace events ({len(trace_sink)} spans) to {args.trace}")
 
     if args.config:
         config = load_config(args.config)
@@ -880,7 +929,7 @@ def main() -> None:
               f"{spec.n_procs} procs x {spec.fields_per_proc} fields x {spec.field_size} B\n")
         print(f"{'io':>8s} {'write GiB/s':>12s} {'read GiB/s':>11s} {'us/field(w)':>12s} "
               f"{'list(step=0)':>12s} {'tiers/lanes':>11s}")
-        for row in run_config(config, spec):
+        for row in run_config(config, spec, trace_sink=trace_sink):
             print(f"{row['io']:>8s} {row['write_GiBps']:12.3f} {row['read_GiBps']:11.3f} "
                   f"{row['us_per_field_w']:12.1f} {row['listed_step0']:12d} {row['n_parts']:11d}")
             if row["part_bytes_written"]:
@@ -890,6 +939,7 @@ def main() -> None:
                 print(f"{'':8s} effective {row['effective_bytes_written'] / (1 << 20):.1f} MiB "
                       f"over wire {row['wire_bytes_written'] / (1 << 20):.1f} MiB "
                       f"(x{row['codec_ratio_w']:.2f} codec win)")
+        publish_trace()
         return
 
     if args.request:
@@ -939,7 +989,8 @@ def main() -> None:
               f"{spec.fields_per_proc} fields x {spec.field_size} B per proc\n")
         results = scaling_sweep(spec, backends=tuple(args.backends),
                                 procs_list=procs_list, out=args.out,
-                                codec_nbits=args.codec_nbits)
+                                codec_nbits=args.codec_nbits,
+                                trace_sink=trace_sink)
         print(f"{'backend':16s} {'procs':>5s} {'write agg':>10s} {'write/proc':>11s} "
               f"{'read/proc':>10s} {'w p99 us':>9s} {'eff/wire':>9s}")
         for backend, data in results["backends"].items():
@@ -952,14 +1003,17 @@ def main() -> None:
                       f"{1e6 * p99:9.1f} {ratio}")
             print(f"{backend:16s} knee at n_procs={data['knee_n_procs']}")
         print(f"\nwrote {args.out}")
+        publish_trace()
         return
 
     print(f"fdb-hammer: {spec.n_procs} procs x {spec.fields_per_proc} fields "
           f"x {spec.field_size} B  ({spec.total_bytes / GiB:.3f} GiB)\n")
     print(f"{'backend':8s} {'lanes':>5s} {'io':>8s} {'write GiB/s':>12s} {'read GiB/s':>11s} {'us/field(w)':>12s}")
-    for row in sweep(spec, backends=tuple(args.backends), lanes_sweep=tuple(args.lanes)):
+    for row in sweep(spec, backends=tuple(args.backends), lanes_sweep=tuple(args.lanes),
+                     trace_sink=trace_sink):
         print(f"{row['backend']:8s} {row['lanes']:5d} {row['io']:>8s} "
               f"{row['write_GiBps']:12.3f} {row['read_GiBps']:11.3f} {row['us_per_field_w']:12.1f}")
+    publish_trace()
 
 
 if __name__ == "__main__":

@@ -116,23 +116,50 @@ class AsyncFDB(FDBClient):
     # ------------------------------------------------------------ writer pool
     def _archive_batch_now(self, batch) -> None:
         """Hand one coalesced batch to the backend; errors are captured for
-        the caller-facing methods, telemetry recorded either way."""
+        the caller-facing methods, telemetry recorded either way.
+
+        The execution span cannot be a CHILD of the enqueue spans — they
+        closed before this writer thread picked the items up — so it LINKS
+        (follows-from) to the first enqueue context instead, sharing its
+        trace id: queue-wait becomes a first-class, visible gap between the
+        enqueue span and the linked execution span."""
+        tr = self._trace
+        link = None
+        if tr.enabled:
+            for _, _, _, ctx in batch:
+                if ctx is not None:
+                    link = ctx
+                    break
         t0 = time.perf_counter()
-        try:
-            self.fdb.archive_batch([(key, data) for key, data, _ in batch])
-        except Exception as e:  # noqa: BLE001 — surfaced on archive/flush
-            with self._err_mu:
-                self._errors.append(e)
-        finally:
-            dt = time.perf_counter() - t0
-            # facade-level telemetry only: payload bytes are NOT accounted
-            # here — the backend store already counts them, and a merged
-            # stats_snapshot() must not double-count (nor count bytes for a
-            # batch whose backend call failed)
-            records = [("async_queue_wait", {"seconds": t0 - t_enq}) for _, _, t_enq in batch]
-            records.append(("async_archive_batch", {"seconds": dt}))
-            records.append(("async_batch_fields", {"count": len(batch)}))
-            self.async_stats.record_burst(records)
+        sp = tr.span("async.archive_batch", parent=None, link=link)
+        with sp:
+            if tr.enabled:
+                sp.set("n_fields", len(batch))
+                sp.set(
+                    "queue_wait_max_s",
+                    max(t0 - t_enq for _, _, t_enq, _ in batch),
+                )
+                links = [c.span_id for _, _, _, c in batch if c is not None]
+                if links:
+                    sp.set("enqueue_spans", links)
+            try:
+                self.fdb.archive_batch([(key, data) for key, data, _, _ in batch])
+            except Exception as e:  # noqa: BLE001 — surfaced on archive/flush
+                with self._err_mu:
+                    self._errors.append(e)
+            finally:
+                dt = time.perf_counter() - t0
+                # facade-level telemetry only: payload bytes are NOT accounted
+                # here — the backend store already counts them, and a merged
+                # stats_snapshot() must not double-count (nor count bytes for
+                # a batch whose backend call failed)
+                records = [
+                    ("async_queue_wait", {"seconds": t0 - t_enq})
+                    for _, _, t_enq, _ in batch
+                ]
+                records.append(("async_archive_batch", {"seconds": dt}))
+                records.append(("async_batch_fields", {"count": len(batch)}))
+                self.async_stats.record_burst(records)
 
     def _writer_loop(self, q: queue.Queue) -> None:
         while True:
@@ -191,18 +218,25 @@ class AsyncFDB(FDBClient):
         if self._closed:
             raise RuntimeError("archive() on a closed AsyncFDB")
         self._raise_pending()
-        key = self._as_key(key)
-        self.schema.validate(key)  # fail fast, in the caller, not the pool
-        self._qs[_writer_lane(key) % len(self._qs)].put(
-            (key, bytes(data), time.perf_counter())
-        )
+        tr = self._trace
+        with tr.span("async.enqueue") as sp:
+            key = self._as_key(key)
+            self.schema.validate(key)  # fail fast, in the caller, not the pool
+            # the enqueue span's context rides in the queue item so the
+            # writer-lane execution span can link back to it (sp.context is
+            # None on the null span — no allocation when tracing is off)
+            self._qs[_writer_lane(key) % len(self._qs)].put(
+                (key, bytes(data), time.perf_counter(), sp.context)
+            )
 
     def drain(self) -> None:
         """Write barrier: block until every queued field has been archived
         into the backend (visible on immediate-visibility backends, pending
         publish on deferred ones).  Does NOT flush the underlying FDB."""
-        for q in self._qs:
-            q.join()
+        tr = self._trace
+        with tr.span("async.drain"):
+            for q in self._qs:
+                q.join()
         self._raise_pending()
 
     def flush(self) -> None:
@@ -227,16 +261,36 @@ class AsyncFDB(FDBClient):
     def retrieve_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[DataHandle | None]:
         return self.fdb.retrieve_batch(keys)
 
+    def _traced_chunk(self, method, chunk, ctx):
+        """Run one read chunk on a pool thread, parented under the caller's
+        fan-out span (explicit cross-thread parent: the fan-out span stays
+        open until every future resolves, so containment holds)."""
+        with self._trace.span("async.read_chunk", parent=ctx) as sp:
+            if self._trace.enabled:
+                sp.set("n_keys", len(chunk))
+            return method(chunk)
+
     def _fan_out(self, keys: list, method) -> list:
-        chunks = [keys[i : i + self._read_batch_size] for i in range(0, len(keys), self._read_batch_size)]
-        if len(chunks) <= 1:
-            return method(list(keys))
-        pool = self._read_pool()
-        futures = [pool.submit(method, c) for c in chunks]
-        out: list = []
-        for f in futures:
-            out.extend(f.result())
-        return out
+        tr = self._trace
+        with tr.span("async.fan_out") as sp:
+            chunks = [
+                keys[i : i + self._read_batch_size]
+                for i in range(0, len(keys), self._read_batch_size)
+            ]
+            if len(chunks) <= 1:
+                return method(list(keys))
+            if tr.enabled:
+                sp.set("n_keys", len(keys))
+                sp.set("n_chunks", len(chunks))
+            ctx = sp.context
+            pool = self._read_pool()
+            futures = [
+                pool.submit(self._traced_chunk, method, c, ctx) for c in chunks
+            ]
+            out: list = []
+            for f in futures:
+                out.extend(f.result())
+            return out
 
     # a FieldSet from retrieve_many resolves in ONE fetch (batch_size=None),
     # and that fetch is the parallel chunked fan-out over the reader pool

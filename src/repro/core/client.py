@@ -28,6 +28,7 @@ import warnings
 from dataclasses import dataclass
 from typing import Iterable, Iterator, Mapping, Sequence
 
+from ..obs.tracer import NULL_TRACER, install_tracer
 from .catalogue import ListEntry
 from .datahandle import DataHandle
 from .fieldset import FieldSet
@@ -76,6 +77,22 @@ class FDBClient(abc.ABC):
     #: explicit ``nbits`` — :class:`~repro.core.codec.CodecFDB` tiers fix it
     #: declaratively per tier
     _codec_nbits: int = 16
+
+    #: span tracer — the class-level null tracer means tracing costs nothing
+    #: until :meth:`set_tracer` (or the ``"trace"`` config option) installs a
+    #: real one on the instance
+    _trace = NULL_TRACER
+
+    @property
+    def tracer(self):
+        """The tracer observing this client (:data:`~repro.obs.NULL_TRACER`
+        unless one was installed)."""
+        return self._trace
+
+    def set_tracer(self, tracer) -> int:
+        """Install ``tracer`` on this client and every facade below it;
+        returns the number of clients touched."""
+        return install_tracer(self, tracer)
 
     # -------------------------------------------------------- required hooks
     @abc.abstractmethod
@@ -181,17 +198,23 @@ class FDBClient(abc.ABC):
         ``nbits`` overrides the client's default for this call."""
         from .codec import encode_fields
 
-        keys = list(keys)
-        payloads = encode_fields(
-            fields,
-            nbits=self._codec_nbits if nbits is None else nbits,
-            stats=self._codec_sink(),
-        )
-        if len(keys) != len(payloads):
-            raise ValueError(
-                f"archive_fields got {len(keys)} keys for {len(payloads)} fields"
+        tr = self._trace
+        with tr.span("client.archive_fields") as sp:
+            keys = list(keys)
+            payloads = encode_fields(
+                fields,
+                nbits=self._codec_nbits if nbits is None else nbits,
+                stats=self._codec_sink(),
+                tracer=tr,
             )
-        self.archive_batch(list(zip(keys, payloads)))
+            if len(keys) != len(payloads):
+                raise ValueError(
+                    f"archive_fields got {len(keys)} keys for {len(payloads)} fields"
+                )
+            if tr.enabled:
+                sp.set("n_fields", len(keys))
+                sp.set("wire_bytes", sum(len(p) for p in payloads))
+            self.archive_batch(list(zip(keys, payloads)))
 
     def retrieve_fields(self, request) -> "DecodedFieldSet":
         """MARS-style retrieval of codec'd fields: ``retrieve_many`` under
@@ -204,7 +227,9 @@ class FDBClient(abc.ABC):
 
         fs = self.retrieve_many(request)
         chunk = self._fieldset_batch if self._fieldset_batch is not None else len(fs)
-        return DecodedFieldSet(fs, chunk=chunk, stats=self._codec_sink())
+        return DecodedFieldSet(
+            fs, chunk=chunk, stats=self._codec_sink(), tracer=self._trace
+        )
 
     # --------------------------------------------------------------- requests
     def _validated_request(self, request) -> Request:
@@ -238,12 +263,16 @@ class FDBClient(abc.ABC):
         whichever spelling was archived.  Returns a lazy :class:`FieldSet`
         — iterate ``(Key, DataHandle)`` pairs or take the aggregated
         streaming handle."""
-        req = self._validated_request(request)
-        if req.is_exact(self.schema):
-            keys = req.expand(self.schema)
-        else:
-            keys = [e.key for e in self._list(req)]
-        return FieldSet(keys, self._many_fetch, batch_size=self._fieldset_batch)
+        tr = self._trace
+        with tr.span("client.retrieve_many") as sp:
+            req = self._validated_request(request)
+            if req.is_exact(self.schema):
+                keys = req.expand(self.schema)
+            else:
+                keys = [e.key for e in self._list(req)]
+            if tr.enabled:
+                sp.set("n_keys", len(keys))
+            return FieldSet(keys, self._many_fetch, batch_size=self._fieldset_batch)
 
     def read_many(self, request) -> dict[Key, bytes | None]:
         """Deprecated: use ``retrieve_many(request).read_all()``."""
@@ -267,18 +296,23 @@ class FDBClient(abc.ABC):
         one (``step=0/to/2``, ``param=*``, multi-value lists) would suggest
         a subset wipe this API cannot do — that raises instead of silently
         deleting the whole dataset."""
-        req = self._validated_request(request)
-        self._wipe_validate(req)
-        # a wipe must see everything THIS client archived — queued or
-        # unpublished fields would otherwise dodge catalogue-resolved spans
-        # (deferred-visibility backends) and dangle or survive; flushing
-        # first makes wipe-after-archive well-defined on every facade
-        self.flush()
-        ds_req = Request({k: req[k] for k in self.schema.dataset_keys})
-        report = WipeReport()
-        for ds, entries in self._wipe_targets(ds_req):
-            report = report + self._wipe_dataset(ds, entries)
-        return report
+        tr = self._trace
+        with tr.span("client.wipe") as sp:
+            req = self._validated_request(request)
+            self._wipe_validate(req)
+            # a wipe must see everything THIS client archived — queued or
+            # unpublished fields would otherwise dodge catalogue-resolved spans
+            # (deferred-visibility backends) and dangle or survive; flushing
+            # first makes wipe-after-archive well-defined on every facade
+            self.flush()
+            ds_req = Request({k: req[k] for k in self.schema.dataset_keys})
+            report = WipeReport()
+            for ds, entries in self._wipe_targets(ds_req):
+                report = report + self._wipe_dataset(ds, entries)
+            if tr.enabled:
+                sp.set("entries_removed", report.entries_removed)
+                sp.set("bytes_freed", report.bytes_freed)
+            return report
 
     def _wipe_validate(self, req: Request) -> None:
         """The wipe request contract, shared by every facade INCLUDING the

@@ -53,6 +53,7 @@ from typing import Iterator, Mapping, Sequence
 import numpy as np
 
 from ..kernels.grib_pack import grib_pack, grib_unpack, payload_dtype
+from ..obs.tracer import NULL_TRACER
 from .client import FDBClient, WipeReport
 from .datahandle import DataHandle
 from .fieldset import FieldSet
@@ -208,7 +209,7 @@ def _as_field_list(fields) -> list[np.ndarray]:
     return out
 
 
-def encode_fields(fields, *, nbits: int = 16, stats=None) -> list[bytes]:
+def encode_fields(fields, *, nbits: int = 16, stats=None, tracer=None) -> list[bytes]:
     """Bit-pack a batch of fields into wire payloads.
 
     ``fields`` is an ``(F, H, W)`` array or a sequence of ``(H, W)`` arrays.
@@ -216,8 +217,10 @@ def encode_fields(fields, *, nbits: int = 16, stats=None) -> list[bytes]:
     distinct shape when ragged) — the per-launch dispatch cost is amortised
     exactly like the backends amortise per-op I/O costs in
     ``archive_batch``.  Returns one payload per field, in input order.
+    ``tracer`` records one span per kernel launch with effective/wire bytes.
     """
     dtype = payload_dtype(nbits)  # validates nbits before any device work
+    tr = tracer if tracer is not None else NULL_TRACER
     flist = _as_field_list(fields)
     if not flist:
         return []
@@ -227,18 +230,25 @@ def encode_fields(fields, *, nbits: int = 16, stats=None) -> list[bytes]:
     for i, f in enumerate(flist):
         groups.setdefault(f.shape, []).append(i)
     for shape, idxs in groups.items():
-        batch = np.stack([flist[i] for i in idxs])  # (f, H, W) float32
-        _count_launch("pack")
-        codes, ref, scale = grib_pack(batch, nbits=nbits)
-        codes = np.asarray(codes).astype(dtype)
-        ref = np.asarray(ref, dtype=np.float64)
-        scale = np.asarray(scale, dtype=np.float64)
         h, w = shape
-        for j, i in enumerate(idxs):
-            header = struct.pack(
-                _HEADER_FMT, _MAGIC, _VERSION, nbits, 0, h, w, ref[j], scale[j]
-            )
-            payloads[i] = header + codes[j].tobytes()
+        with tr.span("codec.pack") as sp:
+            batch = np.stack([flist[i] for i in idxs])  # (f, H, W) float32
+            _count_launch("pack")
+            codes, ref, scale = grib_pack(batch, nbits=nbits)
+            codes = np.asarray(codes).astype(dtype)
+            ref = np.asarray(ref, dtype=np.float64)
+            scale = np.asarray(scale, dtype=np.float64)
+            for j, i in enumerate(idxs):
+                header = struct.pack(
+                    _HEADER_FMT, _MAGIC, _VERSION, nbits, 0, h, w, ref[j], scale[j]
+                )
+                payloads[i] = header + codes[j].tobytes()
+            if tr.enabled:
+                sp.set("nbits", nbits)
+                sp.set("fields", len(idxs))
+                sp.set("shape", [h, w])
+                sp.set("effective_bytes", len(idxs) * h * w * 4)
+                sp.set("wire_bytes", len(idxs) * wire_size(shape, nbits))
     if stats is not None:
         # effective (pre-codec) bytes only — the WIRE bytes of these
         # payloads are counted by the backend sinks when they land, so the
@@ -254,14 +264,20 @@ def encode_fields(fields, *, nbits: int = 16, stats=None) -> list[bytes]:
 
 
 def decode_payloads(
-    payloads: Sequence[bytes | None], *, stats=None, labels: Sequence | None = None
+    payloads: Sequence[bytes | None],
+    *,
+    stats=None,
+    labels: Sequence | None = None,
+    tracer=None,
 ) -> list[np.ndarray | None]:
     """Unpack wire payloads back to float32 fields.
 
     ``None`` entries (absent fields) pass through.  All payloads decode in
     ONE ``grib_unpack`` kernel launch per distinct field shape.  ``labels``
     (e.g. the MARS keys) contextualise :class:`CodecError` messages.
+    ``tracer`` records one span per kernel launch with effective/wire bytes.
     """
+    tr = tracer if tracer is not None else NULL_TRACER
     t0 = time.perf_counter()
     out: list[np.ndarray | None] = [None] * len(payloads)
     headers: list[CodecHeader | None] = [None] * len(payloads)
@@ -274,21 +290,28 @@ def decode_payloads(
         headers[i] = hdr
         groups.setdefault((hdr.height, hdr.width, hdr.nbits), []).append(i)
     for (h, w, nbits), idxs in groups.items():
-        dtype = payload_dtype(nbits)
-        codes = np.stack(
-            [
-                np.frombuffer(payloads[i], dtype=dtype, offset=CODEC_HEADER_SIZE)
-                .reshape(h, w)
-                .astype(np.int32)
-                for i in idxs
-            ]
-        )
-        ref = np.asarray([headers[i].ref for i in idxs], dtype=np.float32)
-        scale = np.asarray([headers[i].scale for i in idxs], dtype=np.float32)
-        _count_launch("unpack")
-        decoded = np.asarray(grib_unpack(codes, ref, scale))
-        for j, i in enumerate(idxs):
-            out[i] = decoded[j]
+        with tr.span("codec.unpack") as sp:
+            dtype = payload_dtype(nbits)
+            codes = np.stack(
+                [
+                    np.frombuffer(payloads[i], dtype=dtype, offset=CODEC_HEADER_SIZE)
+                    .reshape(h, w)
+                    .astype(np.int32)
+                    for i in idxs
+                ]
+            )
+            ref = np.asarray([headers[i].ref for i in idxs], dtype=np.float32)
+            scale = np.asarray([headers[i].scale for i in idxs], dtype=np.float32)
+            _count_launch("unpack")
+            decoded = np.asarray(grib_unpack(codes, ref, scale))
+            for j, i in enumerate(idxs):
+                out[i] = decoded[j]
+            if tr.enabled:
+                sp.set("nbits", nbits)
+                sp.set("fields", len(idxs))
+                sp.set("shape", [h, w])
+                sp.set("effective_bytes", len(idxs) * h * w * 4)
+                sp.set("wire_bytes", sum(len(payloads[i]) for i in idxs))
     if stats is not None:
         # effective bytes only; the wire reads were counted by the backend
         stats.record(
@@ -310,10 +333,13 @@ class DecodedFieldSet:
     are read and closed as each chunk resolves.
     """
 
-    def __init__(self, fieldset: FieldSet, *, chunk: int | None = 64, stats=None):
+    def __init__(
+        self, fieldset: FieldSet, *, chunk: int | None = 64, stats=None, tracer=None
+    ):
         self._fs = fieldset
         self._chunk = max(1, len(fieldset) if chunk is None else chunk)
         self._stats = stats
+        self._tracer = tracer
         self._arrays: list[np.ndarray | None | type(...)] = [...] * len(fieldset)
         self._mu = threading.Lock()
 
@@ -337,6 +363,7 @@ class DecodedFieldSet:
                 payloads,
                 stats=self._stats,
                 labels=[self._fs.keys[j] for j in idxs],
+                tracer=self._tracer,
             )
             for j, a in zip(idxs, decoded):
                 self._arrays[j] = a

@@ -37,6 +37,13 @@ composition of the four facades, nested arbitrarily:
     self-describing payloads lazily — a hot DAOS tier can pack at 16 bits
     while the cold POSIX archive keeps 24, declaratively per tier.
 
+Any node may additionally carry ``"trace": true`` (or a mapping with
+``capacity`` / ``slow_op_s`` / ``slow_capacity``): a
+:class:`~repro.obs.Tracer` is built and installed on the whole subtree via
+:func:`~repro.obs.install_tracer`, reachable afterwards as
+``client.tracer``.  In practice it sits at the root, tracing the entire
+composition.
+
 ``{"type": "remote", "addr": "host:port"}`` — or
 ``{"type": "remote", "inner": {...}}``
     a :class:`~repro.core.remote.RemoteFDB` reaching an FDB served in
@@ -314,6 +321,30 @@ def _config_type(cfg: Mapping) -> str:
     return t
 
 
+def _validate_trace(spec) -> None:
+    if spec is None or isinstance(spec, bool):
+        return
+    if isinstance(spec, Mapping):
+        allowed = {"capacity", "slow_op_s", "slow_capacity", "proc"}
+        unknown = set(spec) - allowed
+        if unknown:
+            raise ConfigError(
+                f"unknown trace option(s) {sorted(unknown)} "
+                f"(expected a subset of {sorted(allowed)})"
+            )
+        for k in ("capacity", "slow_capacity"):
+            v = spec.get(k)
+            if v is not None and (not isinstance(v, int) or isinstance(v, bool) or v < 1):
+                raise ConfigError(f"trace {k!r} must be a positive int, got {v!r}")
+        v = spec.get("slow_op_s")
+        if v is not None and (not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0):
+            raise ConfigError(f"trace 'slow_op_s' must be a non-negative number, got {v!r}")
+        return
+    raise ConfigError(
+        f"trace must be a bool or an options mapping, got {type(spec).__name__}"
+    )
+
+
 def validate_config(config: Mapping) -> None:
     """Structural validation of a config tree, without building anything —
     unknown types, missing required fields and malformed rules all raise
@@ -322,6 +353,7 @@ def validate_config(config: Mapping) -> None:
         return  # an already-built client is a valid (programmatic) leaf
     if not isinstance(config, Mapping):
         raise ConfigError(f"config must be a mapping, got {type(config).__name__}")
+    _validate_trace(config.get("trace"))
     t = _config_type(config)
     if t == "local":
         if not config.get("backend"):
@@ -494,6 +526,17 @@ def build_fdb(config: Mapping) -> FDBClient:
     if isinstance(config, FDBConfig):
         config = dict(config)
     validate_config(config)
+    trace_spec = config.get("trace") if isinstance(config, Mapping) else None
+    if trace_spec is not None:
+        # strip before dispatch — a local node would otherwise hand "trace"
+        # to the backend factories as an unknown param
+        config = {k: v for k, v in config.items() if k != "trace"}
+        client = build_fdb(config)
+        if trace_spec:
+            from ..obs.tracer import install_tracer, make_tracer
+
+            install_tracer(client, make_tracer(trace_spec))
+        return client
     t = _config_type(config)
     if t == "local":
         return _build_local(config)

@@ -52,9 +52,19 @@ class FDB(FDBClient):
 
     # ------------------------------------------------------------------ write
     def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
-        split = self._split(key)
-        location = self.store.archive(bytes(data), split.dataset, split.collocation)
-        self.catalogue.archive(split.dataset, split.collocation, split.element, location)
+        tr = self._trace
+        with tr.span("fdb.archive"):
+            split = self._split(key)
+            with tr.span("store.archive") as sp:
+                if tr.enabled:
+                    sp.set("bytes", len(data))
+                location = self.store.archive(
+                    bytes(data), split.dataset, split.collocation
+                )
+            with tr.span("catalogue.archive"):
+                self.catalogue.archive(
+                    split.dataset, split.collocation, split.element, location
+                )
 
     def archive_batch(self, items: Sequence[tuple[Key | Mapping[str, str], bytes]]) -> None:
         """Archive many (key, data) pairs in one backend round.
@@ -63,13 +73,26 @@ class FDB(FDBClient):
         (locks, OID allocation, completion waits) are amortised across the
         batch.  The ordering invariant holds batch-wide: the Store archives
         the WHOLE batch before the Catalogue indexes any of it."""
-        splits = [self._split(key) for key, _ in items]
-        locations = self.store.archive_batch(
-            [(bytes(data), s.dataset, s.collocation) for (_, data), s in zip(items, splits)]
-        )
-        self.catalogue.archive_batch(
-            [(s.dataset, s.collocation, s.element, loc) for s, loc in zip(splits, locations)]
-        )
+        tr = self._trace
+        with tr.span("fdb.archive_batch") as sp:
+            splits = [self._split(key) for key, _ in items]
+            if tr.enabled:
+                sp.set("n_items", len(splits))
+                sp.set("bytes", sum(len(d) for _, d in items))
+            with tr.span("store.archive_batch"):
+                locations = self.store.archive_batch(
+                    [
+                        (bytes(data), s.dataset, s.collocation)
+                        for (_, data), s in zip(items, splits)
+                    ]
+                )
+            with tr.span("catalogue.archive_batch"):
+                self.catalogue.archive_batch(
+                    [
+                        (s.dataset, s.collocation, s.element, loc)
+                        for s, loc in zip(splits, locations)
+                    ]
+                )
 
     def _split(self, key: Key | Mapping[str, str]) -> SplitKey:
         return self.schema.split(self._as_key(key))
@@ -84,14 +107,19 @@ class FDB(FDBClient):
         # until entries it observed are published, not return early empty-
         # handed because another flusher took them.
         take = getattr(self.catalogue, "take_pending", None)
-        with self._flush_mu:
+        tr = self._trace
+        with self._flush_mu, tr.span("fdb.flush"):
             if take is not None:
                 pending = take()
-                self.store.flush()       # data durable first …
-                self.catalogue.publish_pending(pending)  # … then publish
+                with tr.span("store.flush"):
+                    self.store.flush()   # data durable first …
+                with tr.span("catalogue.publish"):
+                    self.catalogue.publish_pending(pending)  # … then publish
             else:
-                self.store.flush()
-                self.catalogue.flush()
+                with tr.span("store.flush"):
+                    self.store.flush()
+                with tr.span("catalogue.flush"):
+                    self.catalogue.flush()
 
     # ------------------------------------------------------------------- read
     def retrieve(self, key: Key | Mapping[str, str]) -> DataHandle | None:
@@ -104,11 +132,17 @@ class FDB(FDBClient):
     def retrieve_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[DataHandle | None]:
         """Vectored ``retrieve``: one Catalogue batch lookup, one Store batch
         open.  Absent fields come back as None."""
-        splits = [self._split(k) for k in keys]
-        locations = self.catalogue.retrieve_batch(
-            [(s.dataset, s.collocation, s.element) for s in splits]
-        )
-        return self.store.retrieve_batch(locations)
+        tr = self._trace
+        with tr.span("fdb.retrieve_batch") as sp:
+            splits = [self._split(k) for k in keys]
+            if tr.enabled:
+                sp.set("n_keys", len(splits))
+            with tr.span("catalogue.retrieve_batch"):
+                locations = self.catalogue.retrieve_batch(
+                    [(s.dataset, s.collocation, s.element) for s in splits]
+                )
+            with tr.span("store.retrieve_batch"):
+                return self.store.retrieve_batch(locations)
 
     def _list(self, request: Request) -> Iterator[ListEntry]:
         return self.catalogue.list(request)
@@ -118,15 +152,18 @@ class FDB(FDBClient):
         """Remove one dataset everywhere: count what the index holds, drop
         the index, then drop the store objects — index-first, so no reader
         can hold an index entry pointing at already-deleted bytes."""
+        tr = self._trace
         if entries is None:
             entries = list(self.catalogue.list(Request(dataset_key)))
         indexed_bytes = sum(e.location.length for e in entries)
-        self.catalogue.wipe(dataset_key)
+        with tr.span("catalogue.wipe"):
+            self.catalogue.wipe(dataset_key)
         # the store reports the bytes it physically reclaimed itself; on
         # layouts where the catalogue's dataset-directory/container removal
         # already took the data with it, that is 0 and the indexed byte
         # count stands in
-        store_bytes = self.store.wipe(dataset_key) or 0
+        with tr.span("store.wipe"):
+            store_bytes = self.store.wipe(dataset_key) or 0
         # report.datasets means "what was actually wiped": an exact
         # multi-value span may name datasets that never existed — those
         # no-op wipes must not be listed

@@ -71,7 +71,7 @@ class _Conn:
     call owns its connection until the response lands, which keeps the
     retry story trivially safe.)"""
 
-    __slots__ = ("sock", "conn_id", "schema_spec", "_max_frame")
+    __slots__ = ("sock", "conn_id", "schema_spec", "ext_version", "_max_frame")
 
     def __init__(self, addr: tuple[str, int], timeout: float | None,
                  conn_id: int, max_frame: int):
@@ -85,6 +85,10 @@ class _Conn:
             if op != Op.OK:
                 raise P.decode_error(cur)
             self.schema_spec = json.loads(cur.str_("schema spec"))
+            # a v2 server echoes its extension level after the schema spec;
+            # a v1 server sends nothing there and negotiates level 1 — the
+            # client then never sends TRACE_FLAG'd frames on this socket
+            self.ext_version = P.decode_hello_ext(cur)
         except BaseException:
             self.sock.close()
             raise
@@ -214,51 +218,73 @@ class RemoteFDB(FDBClient):
 
     def _call(self, opcode: int, payload: bytes, op_name: str) -> Cursor:
         """One request/response round with pooling, timeout mapping and
-        bounded retry on transport faults."""
+        bounded retry on transport faults.
+
+        The whole round runs under a wire span.  When tracing is on AND the
+        connection negotiated the trace extension, the frame goes out
+        TRACE_FLAG'd with this span's context prefixed, so the server's op
+        span becomes a child of the wire span — the send/receive time and
+        the server-side time stitch into one trace."""
         if self._closed:
             raise RuntimeError("RemoteFDB is closed")
-        attempt = 0
-        while True:
-            conn = self._pool.get()
-            if conn is None:
+        tr = self._trace
+        with tr.span("wire.call") as sp:
+            if tr.enabled:
+                sp.name = "wire." + op_name
+            attempt = 0
+            while True:
+                conn = self._pool.get()
+                if conn is None:
+                    try:
+                        conn = self._dial()
+                    except BaseException:
+                        self._pool.put(None)  # give the token back
+                        raise
+                wire_op, wire_payload = opcode, payload
+                if tr.enabled and conn.ext_version >= P.TRACE_EXT_VERSION:
+                    ctx = sp.context
+                    wire_op = opcode | P.TRACE_FLAG
+                    wire_payload = (
+                        P.encode_trace_ctx(ctx.trace_id, ctx.span_id) + payload
+                    )
+                req_id = self._next_req_id()
+                t0 = time.perf_counter()
                 try:
-                    conn = self._dial()
-                except BaseException:
-                    self._pool.put(None)  # give the token back
-                    raise
-            req_id = self._next_req_id()
-            t0 = time.perf_counter()
-            try:
-                resp_op, cur, nread = conn.call(req_id, opcode, payload)
-            except _TRANSPORT_FAULTS as e:
-                conn.close()
-                self._pool.put(None)
-                attempt += 1
-                if attempt > self._retries:
-                    if isinstance(e, (socket.timeout, TimeoutError)):
-                        raise RemoteTimeout(
-                            f"{op_name} timed out after {attempt} attempts "
-                            f"(timeout={self._timeout}s)"
-                        ) from e
-                    raise
-                self.wire_stats.record("remote_retry")
-                time.sleep(self._backoff * (2 ** (attempt - 1)))
-                continue
-            self._pool.put(conn)
-            self.wire_stats.record(
-                op_name,
-                seconds=time.perf_counter() - t0,
-                nbytes_w=len(payload),
-                nbytes_r=nread,
-                shard=f"conn{conn.conn_id}",
-            )
-            if resp_op == Op.ERR:
-                raise P.decode_error(cur)
-            if resp_op != Op.OK:
-                raise ProtocolError(
-                    f"unexpected response opcode {resp_op:#x} to {op_name}"
+                    resp_op, cur, nread = conn.call(req_id, wire_op, wire_payload)
+                except _TRANSPORT_FAULTS as e:
+                    conn.close()
+                    self._pool.put(None)
+                    attempt += 1
+                    if attempt > self._retries:
+                        if isinstance(e, (socket.timeout, TimeoutError)):
+                            raise RemoteTimeout(
+                                f"{op_name} timed out after {attempt} attempts "
+                                f"(timeout={self._timeout}s)"
+                            ) from e
+                        raise
+                    self.wire_stats.record("remote_retry")
+                    time.sleep(self._backoff * (2 ** (attempt - 1)))
+                    continue
+                self._pool.put(conn)
+                self.wire_stats.record(
+                    op_name,
+                    seconds=time.perf_counter() - t0,
+                    nbytes_w=len(payload),
+                    nbytes_r=nread,
+                    shard=f"conn{conn.conn_id}",
                 )
-            return cur
+                if tr.enabled:
+                    sp.set("bytes_out", len(wire_payload))
+                    sp.set("bytes_in", nread)
+                    sp.set("attempts", attempt + 1)
+                    sp.set("conn", conn.conn_id)
+                if resp_op == Op.ERR:
+                    raise P.decode_error(cur)
+                if resp_op != Op.OK:
+                    raise ProtocolError(
+                        f"unexpected response opcode {resp_op:#x} to {op_name}"
+                    )
+                return cur
 
     # ----------------------------------------------------------- required hooks
     def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
@@ -351,6 +377,16 @@ class RemoteFDB(FDBClient):
         cur = self._call(Op.STATS, b"", "stats")
         return json.loads(cur.str_("stats json"))
 
+    def fetch_server_trace(self) -> int:
+        """One TRACE round: pull the server-side spans accumulated for this
+        client's traced ops and adopt them into the local tracer (they carry
+        the client's trace ids, so the trace views stitch).  Returns the
+        number of spans imported.  Requires the trace extension on the wire
+        (a v1 server raises a RemoteError for the unknown opcode)."""
+        cur = self._call(Op.TRACE, b"", "trace")
+        spans = json.loads(cur.str_("trace json"))
+        return self._trace.adopt(spans)
+
     # --------------------------------------------------------------- lifecycle
     def close(self) -> None:
         if self._closed:
@@ -360,6 +396,14 @@ class RemoteFDB(FDBClient):
             self.flush()
         except (RemoteError, *_TRANSPORT_FAULTS) as e:
             err = e
+        if self._trace.enabled:
+            # last chance to stitch: pull the server-side spans for every
+            # traced op this client issued (best effort — the server may be
+            # gone or predate the trace extension)
+            try:
+                self.fetch_server_trace()
+            except (RemoteError, *_TRANSPORT_FAULTS):
+                pass
         self._closed = True
         while True:
             try:

@@ -52,6 +52,20 @@ __all__ = [
 MAGIC = b"RFDB"
 PROTOCOL_VERSION = 1
 
+#: extension level negotiated as an OPTIONAL trailing u16 on HELLO (both
+#: directions).  A v1 peer never reads past the base HELLO fields (neither
+#: ``decode_hello`` nor the client's reply parsing calls ``expect_end``),
+#: so the extra bytes are invisible to it and it simply never negotiates
+#: extensions — old clients and servers interoperate unchanged.  Level >= 2
+#: means: traced request frames (``TRACE_FLAG`` + 16-byte trace-context
+#: prefix) and the ``Op.TRACE`` round are understood.
+TRACE_EXT_VERSION = 2
+
+#: opcode bit marking a request frame whose payload is prefixed with a
+#: trace context (u64 trace id + u64 parent span id).  Request opcodes stay
+#: below 0x40 and responses use the 0x80 bit, so the flag is unambiguous.
+TRACE_FLAG = 0x40
+
 #: refuse frames beyond this many body bytes (1 GiB) — far above any real
 #: batch, far below "the peer sent garbage length bytes"
 DEFAULT_MAX_FRAME = 1 << 30
@@ -95,6 +109,7 @@ class Op:
     WIPE = 0x06
     FLUSH = 0x07
     STATS = 0x08
+    TRACE = 0x09
     OK = 0x80
     ERR = 0x81
 
@@ -102,13 +117,17 @@ class Op:
         HELLO: "hello", ARCHIVE_BATCH: "archive_batch",
         RETRIEVE_BATCH: "retrieve_batch", RETRIEVE_MANY: "retrieve_many",
         LIST: "list", WIPE: "wipe", FLUSH: "flush", STATS: "stats",
-        OK: "ok", ERR: "err",
+        TRACE: "trace", OK: "ok", ERR: "err",
     }
 
 
 # ---------------------------------------------------------------------------
 # primitives
 # ---------------------------------------------------------------------------
+
+def pack_u16(v: int) -> bytes:
+    return _U16.pack(v)
+
 
 def pack_bytes(b: bytes) -> bytes:
     return _U32.pack(len(b)) + b
@@ -199,8 +218,13 @@ def split_frame(body: bytes) -> tuple[int, int, Cursor]:
 # op payloads — encode/decode pairs shared by both ends of the wire
 # ---------------------------------------------------------------------------
 
-def encode_hello() -> bytes:
-    return MAGIC + _U16.pack(PROTOCOL_VERSION)
+def encode_hello(ext_version: int = TRACE_EXT_VERSION) -> bytes:
+    """HELLO payload: base magic+version, plus the extension level as an
+    OPTIONAL trailing u16 a v1 server never reads."""
+    out = MAGIC + _U16.pack(PROTOCOL_VERSION)
+    if ext_version > 1:
+        out += _U16.pack(ext_version)
+    return out
 
 
 def decode_hello(cur: Cursor) -> int:
@@ -213,6 +237,30 @@ def decode_hello(cur: Cursor) -> int:
             f"protocol version {version} unsupported (server speaks {PROTOCOL_VERSION})"
         )
     return version
+
+
+def decode_hello_ext(cur: Cursor) -> int:
+    """The trailing extension level after :func:`decode_hello` consumed the
+    base fields — 1 (no extensions) when the peer sent none."""
+    if len(cur._buf) - cur._pos >= 2:
+        return cur.u16("extension version")
+    return 1
+
+
+def mask_op(opcode: int) -> tuple[int, bool]:
+    """``(base opcode, traced?)`` — strips :data:`TRACE_FLAG` off requests."""
+    if opcode & 0x80:
+        return opcode, False
+    return opcode & ~TRACE_FLAG, bool(opcode & TRACE_FLAG)
+
+
+def encode_trace_ctx(trace_id: int, span_id: int) -> bytes:
+    """The 16-byte trace-context prefix of a TRACE_FLAG'd request payload."""
+    return _U64.pack(trace_id) + _U64.pack(span_id)
+
+
+def decode_trace_ctx(cur: Cursor) -> tuple[int, int]:
+    return cur.u64("trace id"), cur.u64("parent span id")
 
 
 def encode_archive_batch(items: Sequence[tuple[Key, bytes]]) -> bytes:

@@ -45,6 +45,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Mapping
 
 from ...metrics.iostats import IOStats
+from ...obs.tracer import NULL_TRACER, SpanContext, Tracer, install_tracer
 from . import protocol as P
 from .protocol import Cursor, Op, ProtocolError
 
@@ -52,6 +53,16 @@ __all__ = ["FDBServer", "serve_fdb"]
 
 #: sentinel the reader enqueues on clean EOF so the worker drains and exits
 _EOF = object()
+
+#: span names per served op (precomputed — no per-op string building)
+_SERVER_SPANS = {
+    Op.RETRIEVE_BATCH: "server.retrieve_batch",
+    Op.RETRIEVE_MANY: "server.retrieve_many",
+    Op.LIST: "server.list",
+    Op.WIPE: "server.wipe",
+    Op.FLUSH: "server.flush",
+    Op.STATS: "server.stats",
+}
 
 
 class FDBServer:
@@ -91,6 +102,12 @@ class FDBServer:
         self._max_frame = max_frame
         self.addr: tuple[str, int] | None = None
         self.wire_stats = IOStats("remote-server")
+        #: server-side tracer: the null tracer until the first TRACED frame
+        #: (or TRACE round) arrives — an untraced client pays nothing, a
+        #: traced one gets server-side spans stitched to its trace ids and
+        #: returned over the Op.TRACE round
+        self.tracer = NULL_TRACER
+        self._tracer_mu = threading.Lock()
         self._conn_ids = itertools.count()
         self._conn_tasks: set[asyncio.Task] = set()
         self._executor = ThreadPoolExecutor(
@@ -205,6 +222,19 @@ class FDBServer:
             except (ConnectionError, OSError):
                 pass
 
+    def _ensure_tracer(self) -> None:
+        """Switch the server-side tracer on (idempotent).  Installs it down
+        the whole served tree so backend/tier/codec spans nest under the
+        server op spans automatically."""
+        if self.tracer.enabled:
+            return
+        with self._tracer_mu:
+            if self.tracer.enabled:
+                return
+            tracer = Tracer(proc="server")
+            install_tracer(self.fdb, tracer)
+            self.tracer = tracer
+
     async def _handshake(self, reader, writer, wlock, conn: str) -> None:
         body = await self._read_frame(reader)
         if body is None:
@@ -215,10 +245,16 @@ class FDBServer:
                 f"expected HELLO, got opcode {Op.NAMES.get(opcode, opcode)!r}"
             )
         P.decode_hello(cur)
+        ext = P.decode_hello_ext(cur)
         from ..config import schema_to_config
 
         spec = json.dumps(schema_to_config(self.fdb.schema))
-        await self._send(writer, wlock, req_id, Op.OK, P.pack_str(spec))
+        payload = P.pack_str(spec)
+        if ext >= P.TRACE_EXT_VERSION:
+            # echo the extension level as an optional trailing u16 a v1
+            # client never reads — only a peer that advertised it gets it
+            payload += P.pack_u16(P.TRACE_EXT_VERSION)
+        await self._send(writer, wlock, req_id, Op.OK, payload)
         self.wire_stats.record("wire_hello", nbytes_r=len(body), shard=conn)
 
     async def _read_frame(self, reader: asyncio.StreamReader) -> bytes | None:
@@ -255,16 +291,17 @@ class FDBServer:
             if item is _EOF:
                 return
             req_id, opcode, _ = P.split_frame(item)
-            if opcode == Op.ARCHIVE_BATCH:
+            if P.mask_op(opcode)[0] == Op.ARCHIVE_BATCH:
                 # wire-level batching: drain whatever archive frames are
-                # already queued into one backend round
+                # already queued into one backend round (the TRACE_FLAG bit
+                # is per-frame — masked off before comparing opcodes)
                 frames = [item]
                 while len(frames) < self._coalesce:
                     try:
                         nxt = q.get_nowait()
                     except asyncio.QueueEmpty:
                         break
-                    if nxt is _EOF or P.split_frame(nxt)[1] != Op.ARCHIVE_BATCH:
+                    if nxt is _EOF or P.mask_op(P.split_frame(nxt)[1])[0] != Op.ARCHIVE_BATCH:
                         pending = nxt
                         break
                     frames.append(nxt)
@@ -304,12 +341,27 @@ class FDBServer:
 
     def _archive_frames(self, frames: list[bytes]) -> int:
         """Decode + merge archive frames, one backend ``archive_batch``.
-        Runs on the executor — decoding stays off the event loop."""
+        Runs on the executor — decoding stays off the event loop.  The
+        coalesced backend call is ONE server span, parented under the first
+        traced frame's wire context (one backend round, one span — exactly
+        what the client's wire span timed)."""
         items = []
+        ctx = None
         for f in frames:
-            _, _, cur = P.split_frame(f)
+            _, opcode, cur = P.split_frame(f)
+            traced = P.mask_op(opcode)[1]
+            if traced:
+                tid, sid = P.decode_trace_ctx(cur)
+                if ctx is None:
+                    self._ensure_tracer()
+                    ctx = SpanContext(tid, sid)
             items.extend(P.decode_archive_batch(cur))
-        self.fdb.archive_batch(items)
+        tr = self.tracer
+        with tr.span("server.archive_batch", remote_parent=ctx) as sp:
+            if tr.enabled:
+                sp.set("frames", len(frames))
+                sp.set("n_items", len(items))
+            self.fdb.archive_batch(items)
         return len(items)
 
     async def _run_op(self, body: bytes, writer, wlock, conn: str) -> None:
@@ -326,8 +378,9 @@ class FDBServer:
         except Exception as e:  # noqa: BLE001 — forwarded to the client
             payload, resp_op = P.encode_error(e), Op.ERR
         dt = time.perf_counter() - t0
+        base = P.mask_op(opcode)[0]
         self.wire_stats.record(
-            f"wire_{Op.NAMES.get(opcode, hex(opcode))}",
+            f"wire_{Op.NAMES.get(base, hex(base))}",
             seconds=dt, nbytes_r=len(body), nbytes_w=len(payload), shard=conn,
         )
         await self._send(writer, wlock, req_id, resp_op, payload)
@@ -335,8 +388,29 @@ class FDBServer:
     # --------------------------------------------------------- op execution
     def _serve_op(self, opcode: int, body: bytes) -> bytes:
         """Decode one request frame, run it against the FDB, encode the OK
-        payload.  Runs on the executor thread pool."""
-        _, _, cur = P.split_frame(body)
+        payload.  Runs on the executor thread pool.  A TRACE_FLAG'd frame
+        carries a trace-context prefix: the op executes under a server span
+        parented to the client's wire span, so the client can stitch the
+        server-side time into ONE trace via the Op.TRACE round."""
+        _, raw_op, cur = P.split_frame(body)
+        opcode, traced = P.mask_op(raw_op)
+        ctx = None
+        if traced:
+            tid, sid = P.decode_trace_ctx(cur)
+            self._ensure_tracer()
+            ctx = SpanContext(tid, sid)
+        if opcode == Op.TRACE:
+            # the extended STATS round: hand the accumulated server spans
+            # to the client (drained — each round returns fresh spans)
+            spans = [s.to_dict() for s in self.tracer.drain()]
+            return P.pack_str(json.dumps(spans))
+        tr = self.tracer
+        with tr.span(_SERVER_SPANS.get(opcode, "server.op"), remote_parent=ctx) as sp:
+            if tr.enabled:
+                sp.set("op", Op.NAMES.get(opcode, hex(opcode)))
+            return self._dispatch_op(opcode, cur)
+
+    def _dispatch_op(self, opcode: int, cur: Cursor) -> bytes:
         if opcode == Op.RETRIEVE_BATCH:
             keys = P.decode_keys(cur)
             payloads: list[bytes | None] = []

@@ -66,26 +66,47 @@ class FDBRouter(FDBClient):
     def _scatter(self, keys: Sequence[Key | Mapping[str, str]], method: str) -> list:
         """Group *keys* by lane, call the lane's batch *method* per group,
         reassemble results in input order."""
-        groups: dict[int, list[int]] = {}
-        for i, key in enumerate(keys):
-            groups.setdefault(self.lane_index(key), []).append(i)
-        out: list = [None] * len(keys)
-        for lane_i, idxs in groups.items():
-            results = getattr(self.lanes[lane_i], method)([keys[i] for i in idxs])
-            for i, r in zip(idxs, results):
-                out[i] = r
-        return out
+        tr = self._trace
+        with tr.span("router.scatter") as sp:
+            groups: dict[int, list[int]] = {}
+            for i, key in enumerate(keys):
+                groups.setdefault(self.lane_index(key), []).append(i)
+            if tr.enabled:
+                sp.set("method", method)
+                sp.set("n_keys", len(keys))
+                sp.set("n_lanes", len(groups))
+            out: list = [None] * len(keys)
+            for lane_i, idxs in groups.items():
+                with tr.span("router.lane") as lsp:
+                    if tr.enabled:
+                        lsp.set("lane", lane_i)
+                        lsp.set("n_keys", len(idxs))
+                    results = getattr(self.lanes[lane_i], method)(
+                        [keys[i] for i in idxs]
+                    )
+                for i, r in zip(idxs, results):
+                    out[i] = r
+            return out
 
     # ---------------------------------------------------------------------- API
     def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
         self._lane(key).archive(key, data)
 
     def archive_batch(self, items: Sequence[tuple[Key | Mapping[str, str], bytes]]) -> None:
-        groups: dict[int, list[tuple[Key | Mapping[str, str], bytes]]] = {}
-        for key, data in items:
-            groups.setdefault(self.lane_index(key), []).append((key, data))
-        for lane_i, group in groups.items():
-            self.lanes[lane_i].archive_batch(group)
+        tr = self._trace
+        with tr.span("router.archive_batch") as sp:
+            groups: dict[int, list[tuple[Key | Mapping[str, str], bytes]]] = {}
+            for key, data in items:
+                groups.setdefault(self.lane_index(key), []).append((key, data))
+            if tr.enabled:
+                sp.set("n_items", len(items))
+                sp.set("n_lanes", len(groups))
+            for lane_i, group in groups.items():
+                with tr.span("router.lane_archive") as lsp:
+                    if tr.enabled:
+                        lsp.set("lane", lane_i)
+                        lsp.set("n_items", len(group))
+                    self.lanes[lane_i].archive_batch(group)
 
     def archive_fields(self, keys, fields, *, nbits=None) -> None:
         """Shard the batch BEFORE packing: each lane packs its own slice
@@ -93,14 +114,23 @@ class FDBRouter(FDBClient):
         still sees one whole-batch kernel launch for its share."""
         from .codec import take_fields
 
-        keys = list(keys)
-        groups: dict[int, list[int]] = {}
-        for i, key in enumerate(keys):
-            groups.setdefault(self.lane_index(key), []).append(i)
-        for lane_i, idxs in groups.items():
-            self.lanes[lane_i].archive_fields(
-                [keys[i] for i in idxs], take_fields(fields, idxs), nbits=nbits
-            )
+        tr = self._trace
+        with tr.span("router.archive_fields") as sp:
+            keys = list(keys)
+            groups: dict[int, list[int]] = {}
+            for i, key in enumerate(keys):
+                groups.setdefault(self.lane_index(key), []).append(i)
+            if tr.enabled:
+                sp.set("n_fields", len(keys))
+                sp.set("n_lanes", len(groups))
+            for lane_i, idxs in groups.items():
+                with tr.span("router.lane_archive_fields") as lsp:
+                    if tr.enabled:
+                        lsp.set("lane", lane_i)
+                        lsp.set("n_fields", len(idxs))
+                    self.lanes[lane_i].archive_fields(
+                        [keys[i] for i in idxs], take_fields(fields, idxs), nbits=nbits
+                    )
 
     def flush(self) -> None:
         for lane in self.lanes:

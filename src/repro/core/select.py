@@ -110,6 +110,8 @@ class SelectFDB(FDBClient):
         # identifier — that is a dead tier, i.e. a config typo: fail now
         for match, _ in self._rules:
             self.schema.request_levels(match)
+        # tier-attribution for trace spans: position in rule order
+        self._tier_index = {id(c): i for i, c in enumerate(self.tiers)}
 
     # ------------------------------------------------------------------ routing
     def route(self, key: Key | Mapping[str, str]) -> FDBClient | None:
@@ -147,15 +149,29 @@ class SelectFDB(FDBClient):
 
     # --------------------------------------------------------------------- write
     def archive(self, key: Key | Mapping[str, str], data: bytes) -> None:
-        self._route_or_raise(key).archive(key, data)
+        tr = self._trace
+        with tr.span("select.archive") as sp:
+            client = self._route_or_raise(key)
+            if tr.enabled:
+                sp.set("tier", self._tier_index[id(client)])
+            client.archive(key, data)
 
     def archive_batch(self, items: Sequence[tuple[Key | Mapping[str, str], bytes]]) -> None:
-        groups: dict[int, tuple[FDBClient, list]] = {}
-        for key, data in items:
-            client = self._route_or_raise(key)
-            groups.setdefault(id(client), (client, []))[1].append((key, data))
-        for client, group in groups.values():
-            client.archive_batch(group)
+        tr = self._trace
+        with tr.span("select.archive_batch") as sp:
+            groups: dict[int, tuple[FDBClient, list]] = {}
+            for key, data in items:
+                client = self._route_or_raise(key)
+                groups.setdefault(id(client), (client, []))[1].append((key, data))
+            if tr.enabled:
+                sp.set("n_items", len(items))
+                sp.set("n_tiers", len(groups))
+            for client, group in groups.values():
+                with tr.span("select.tier_archive") as tsp:
+                    if tr.enabled:
+                        tsp.set("tier", self._tier_index[id(client)])
+                        tsp.set("n_items", len(group))
+                    client.archive_batch(group)
 
     def archive_fields(self, keys, fields, *, nbits=None) -> None:
         """Route the batch BEFORE packing: each tier packs its own slice at
@@ -164,15 +180,24 @@ class SelectFDB(FDBClient):
         layout choice, applied to the codec)."""
         from .codec import take_fields
 
-        keys = list(keys)
-        groups: dict[int, tuple[FDBClient, list[int]]] = {}
-        for i, key in enumerate(keys):
-            client = self._route_or_raise(key)
-            groups.setdefault(id(client), (client, []))[1].append(i)
-        for client, idxs in groups.values():
-            client.archive_fields(
-                [keys[i] for i in idxs], take_fields(fields, idxs), nbits=nbits
-            )
+        tr = self._trace
+        with tr.span("select.archive_fields") as sp:
+            keys = list(keys)
+            groups: dict[int, tuple[FDBClient, list[int]]] = {}
+            for i, key in enumerate(keys):
+                client = self._route_or_raise(key)
+                groups.setdefault(id(client), (client, []))[1].append(i)
+            if tr.enabled:
+                sp.set("n_fields", len(keys))
+                sp.set("n_tiers", len(groups))
+            for client, idxs in groups.values():
+                with tr.span("select.tier_archive_fields") as tsp:
+                    if tr.enabled:
+                        tsp.set("tier", self._tier_index[id(client)])
+                        tsp.set("n_fields", len(idxs))
+                    client.archive_fields(
+                        [keys[i] for i in idxs], take_fields(fields, idxs), nbits=nbits
+                    )
 
     def flush(self) -> None:
         for tier in self.tiers:
@@ -189,17 +214,26 @@ class SelectFDB(FDBClient):
         return None if client is None else client.retrieve(key)
 
     def retrieve_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[DataHandle | None]:
-        groups: dict[int, tuple[FDBClient, list[int]]] = {}
-        out: list[DataHandle | None] = [None] * len(keys)
-        for i, key in enumerate(keys):
-            client = self.route(key)
-            if client is not None:
-                groups.setdefault(id(client), (client, []))[1].append(i)
-        for client, idxs in groups.values():
-            results = client.retrieve_batch([keys[i] for i in idxs])
-            for i, r in zip(idxs, results):
-                out[i] = r
-        return out
+        tr = self._trace
+        with tr.span("select.retrieve_batch") as sp:
+            groups: dict[int, tuple[FDBClient, list[int]]] = {}
+            out: list[DataHandle | None] = [None] * len(keys)
+            for i, key in enumerate(keys):
+                client = self.route(key)
+                if client is not None:
+                    groups.setdefault(id(client), (client, []))[1].append(i)
+            if tr.enabled:
+                sp.set("n_keys", len(keys))
+                sp.set("n_tiers", len(groups))
+            for client, idxs in groups.values():
+                with tr.span("select.tier_retrieve") as tsp:
+                    if tr.enabled:
+                        tsp.set("tier", self._tier_index[id(client)])
+                        tsp.set("n_keys", len(idxs))
+                    results = client.retrieve_batch([keys[i] for i in idxs])
+                for i, r in zip(idxs, results):
+                    out[i] = r
+            return out
 
     def _list(self, request: Request) -> Iterator[ListEntry]:
         """Merged listing across every tier the request could touch.  Tiers

@@ -90,7 +90,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str, attn_imp
         _write(out_dir, cell_id, rec)
         return rec
 
-    t0 = time.time()
+    t0 = time.perf_counter()  # monotonic: compile timings must survive clock steps
     mesh = make_production_mesh(multi_pod=multi_pod)
     fn, args, in_shardings, out_shardings, donate = build_cell(cfg, mesh, shape, hp=hp)
     with mesh:
@@ -101,9 +101,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str, attn_imp
             donate_argnums=donate,
         )
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

@@ -67,16 +67,27 @@ class LatencyHistogram:
     # --------------------------------------------------------------- reading
     def percentile(self, q: float) -> float:
         """Latency at quantile ``q`` in [0, 1] (bucket upper bound, clamped
-        to the observed max).  0.0 when the histogram is empty."""
+        to the observed range).  0.0 when the histogram is empty.
+
+        The rank is the 1-based index of the sample the quantile lands on:
+        ``ceil(q * n)``, floored at 1.  A fractional rank would let
+        ``seen >= rank`` fire a bucket early (p50 of three samples is the
+        2nd-ranked one, not wherever 1.5 first crosses), and the low edge
+        reports the observed minimum, not the ``_LO`` bucket bound."""
         if self.n == 0:
             return 0.0
-        rank = q * self.n
+        rank = max(1, math.ceil(q * self.n))
+        if rank == 1:
+            # the lowest-ranked sample is the observed minimum, exactly
+            return self.min_s
         seen = 0
         for i, c in enumerate(self.counts):
             seen += c
             if seen >= rank and c:
                 if i == 0:
-                    return min(_LO, self.max_s)
+                    # underflow bucket: below _LO resolution, min_s is the
+                    # only honest answer
+                    return self.min_s
                 if i == _NBUCKETS - 1:  # overflow: the observed max is all we know
                     return self.max_s
                 return min(_bucket_upper(i), self.max_s)

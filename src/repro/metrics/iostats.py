@@ -46,6 +46,10 @@ class IOStats:
         #: mds_ops) — merged and snapshotted generically so subclass
         #: telemetry survives IOStats.merged()
         self.counters: Counter = Counter()
+        #: names of the sinks folded into this one — a merged snapshot used
+        #: to drop the child identities entirely, making "which tier/lane
+        #: fed this aggregate" unanswerable from the export
+        self.merged_from: list[str] = []
         self._hist: dict[str, LatencyHistogram] = {}
 
     @property
@@ -130,6 +134,8 @@ class IOStats:
             }
             if self.name:
                 snap["name"] = self.name
+            if self.merged_from:
+                snap["merged_from"] = list(self.merged_from)
             return snap
 
     def latency(self, op: str) -> LatencyHistogram | None:
@@ -149,6 +155,7 @@ class IOStats:
             self.effective_bytes_read = 0
             self.shard_ops.clear()
             self.counters.clear()
+            self.merged_from.clear()
             self._hist.clear()
 
     def merge(self, other: "IOStats") -> None:
@@ -162,6 +169,11 @@ class IOStats:
             o_ew, o_er = other.effective_bytes_written, other.effective_bytes_read
             o_shards = Counter(other.shard_ops)
             o_counters = Counter(other.counters)
+            # a merged child contributes its own sources, a leaf its name —
+            # so nested merges flatten to the full provenance list
+            o_sources = list(other.merged_from) or (
+                [other.name] if other.name else []
+            )
             o_hist = {op: h.copy() for op, h in other._hist.items()}
         with self._mu:
             self.ops.update(o_ops)
@@ -174,6 +186,9 @@ class IOStats:
             self.effective_bytes_read += o_er
             self.shard_ops.update(o_shards)
             self.counters.update(o_counters)
+            for src in o_sources:
+                if src not in self.merged_from:
+                    self.merged_from.append(src)
             for op, h in o_hist.items():
                 mine = self._hist.get(op)
                 if mine is None:

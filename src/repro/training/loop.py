@@ -98,7 +98,7 @@ class Trainer:
 
     # ----------------------------------------------------------------- train
     def train(self, n_steps: int, *, fail_at: int | None = None, log_every: int = 10, max_restarts: int = 3) -> TrainReport:
-        t0 = time.time()
+        t0 = time.perf_counter()  # monotonic: wall_s must survive clock steps
         losses = []
         restarts = 0
         self.resume_or_init()
@@ -130,5 +130,5 @@ class Trainer:
         self.ckpt.close()  # drain + stop the background writer machinery
         return TrainReport(
             steps_run=n_steps, final_step=self.step, losses=losses,
-            restarts=restarts, wall_s=time.time() - t0,
+            restarts=restarts, wall_s=time.perf_counter() - t0,
         )

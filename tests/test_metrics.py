@@ -39,6 +39,36 @@ class TestLatencyHistogram:
         assert a.percentile(0.9) == c.percentile(0.9)
         assert a.snapshot()["max_s"] == c.snapshot()["max_s"]
 
+    def test_exact_small_n_percentiles(self):
+        # nearest-rank semantics: rank = max(1, ceil(q*n)); rank 1 is the
+        # observed minimum exactly, not its bucket's upper bound
+        h = LatencyHistogram()
+        h.record(0.005)
+        assert h.percentile(0.5) == 0.005
+        assert h.percentile(0.99) == 0.005
+
+        h2 = LatencyHistogram()
+        h2.record(0.001)
+        h2.record(0.010)
+        # p50 of two samples -> rank ceil(1.0) == 1 -> the minimum
+        assert h2.percentile(0.5) == 0.001 == h2.min_s
+        # p100 -> rank 2 -> second sample's bucket, clamped by max
+        assert 0.010 <= h2.percentile(1.0) <= 0.010 * 10 ** (1 / 8)
+
+        h3 = LatencyHistogram()
+        for v in (0.001, 0.010, 0.100):
+            h3.record(v)
+        # p50 of three -> rank 2 (the middle sample), never the first
+        p50 = h3.percentile(0.5)
+        assert 0.010 <= p50 <= 0.010 * 10 ** (1 / 8)
+        assert h3.percentile(0.0) == h3.min_s == 0.001
+
+        # all-underflow: min_s is the only honest answer, not the _LO bound
+        hu = LatencyHistogram()
+        hu.record(1e-9)
+        hu.record(2e-9)
+        assert hu.percentile(0.99) == 1e-9 == hu.min_s
+
     def test_empty_and_extremes(self):
         h = LatencyHistogram()
         assert h.percentile(0.99) == 0.0
@@ -72,6 +102,23 @@ class TestIOStats:
         assert snap["ops"]["op"] == 2
         assert snap["bytes_written"] == 3
         assert snap["latency"]["op"]["count"] == 2
+        # the aggregate keeps its provenance: which sinks fed it
+        assert snap["merged_from"] == ["a", "b"]
+
+    def test_merged_from_provenance(self):
+        tiers = [PosixStats(name=f"tier{i}") for i in range(3)]
+        for t in tiers:
+            t.record("write", nbytes_w=1)
+        m = IOStats.merged(tiers, name="tree")
+        assert m.snapshot()["merged_from"] == ["tier0", "tier1", "tier2"]
+        # nested merges flatten to the leaf names, deduplicated
+        outer = IOStats.merged([m, tiers[0]], name="outer")
+        assert outer.snapshot()["merged_from"] == ["tier0", "tier1", "tier2"]
+        # anonymous sinks contribute nothing; reset clears the provenance
+        outer.merge(IOStats())
+        assert outer.snapshot()["merged_from"] == ["tier0", "tier1", "tier2"]
+        outer.reset()
+        assert "merged_from" not in outer.snapshot()
 
     def _hammer_snapshots(self, stats, account_one, ops_of, bytes_of):
         """Concurrent accounting vs snapshot/reset: every cut must be
