@@ -53,6 +53,20 @@ effective (pre-codec) next to wire bandwidth; ``--scaling`` adds a
     PYTHONPATH=src python benchmarks/fdb_hammer.py --scaling --codec-nbits 16
     PYTHONPATH=src python benchmarks/fdb_hammer.py --config tiered-codec
 
+Read-mostly dissemination mode (``--read-mult N``): forecast production is
+write-once read-many — every archived field is retrieved N times.  With
+``--cache`` the FDB under test is wrapped in the
+:class:`~repro.cache.CacheFDB` dissemination tier (sharded read-through
+cache + single-flight coalescing) and the sweeps report hit rate and bytes
+served per backend byte; without it the same N× read load hits the backend
+raw, so the two runs are the A/B cells.  ``--scaling --cache`` adds a
+``"<backend>+cache"`` cell per backend to ``BENCH_contention.json`` — cache
+hits are charged at client-memory speed by the contention model, which is
+what moves the read-side knee right:
+
+    PYTHONPATH=src python benchmarks/fdb_hammer.py --read-mult 8 --cache
+    PYTHONPATH=src python benchmarks/fdb_hammer.py --scaling --read-mult 8 --cache
+
 Remote mode (``--remote``): the MEASURED counterpart of ``--scaling`` —
 serve each backend behind an in-process asyncio
 :class:`~repro.core.remote.FDBServer` and hammer it with REAL client
@@ -86,6 +100,7 @@ from repro.core import (
     make_router,
     wire_size,
 )
+from repro.cache import CacheFDB
 from repro.core.daos import DaosEngine
 from repro.core.posix import PosixStats
 from repro.metrics import make_contention
@@ -123,6 +138,9 @@ class HammerSpec:
     #: (one ``grib_pack`` launch per output-step batch) and retrieve through
     #: ``retrieve_fields``; None = raw opaque payloads (the seed path)
     codec_nbits: int | None = None
+    #: read-mostly dissemination: each archived field is retrieved this many
+    #: times in the retrieve phase (bandwidths count the bytes SERVED)
+    read_mult: int = 1
 
     @property
     def fields_per_proc(self) -> int:
@@ -163,9 +181,13 @@ def make_backend(
     stats=None,
     contention=None,
     codec_nbits: int | None = None,
+    cache_bytes: int | None = None,
 ):
     """Build the FDB under test: a single-lane FDB, or an N-lane router;
-    ``codec_nbits`` wraps it in a :class:`CodecFDB` tier of that width."""
+    ``codec_nbits`` wraps it in a :class:`CodecFDB` tier of that width;
+    ``cache_bytes`` wraps the result (outermost) in a
+    :class:`~repro.cache.CacheFDB` dissemination tier of that budget, with
+    hits charged to *contention* at client-memory speed."""
     if backend not in ("daos", "posix"):
         raise ValueError(f"unknown backend {backend!r}; pick 'daos' or 'posix'")
     schema = NWP_SCHEMA_DAOS if backend == "daos" else NWP_SCHEMA_POSIX
@@ -184,6 +206,9 @@ def make_backend(
         fdb = make_fdb("posix", schema=schema, root=root, stats=stats, contention=contention)
     if codec_nbits is not None:
         fdb = CodecFDB(fdb, nbits=codec_nbits, owns_inner=True)
+    if cache_bytes is not None:
+        fdb = CacheFDB(fdb, max_bytes=cache_bytes, contention=contention,
+                       owns_inner=True)
     return fdb
 
 
@@ -275,7 +300,15 @@ def run_hammer(fdb, spec: HammerSpec, mode: str) -> dict:
                             handle.archive(k, payload)
                     handle.flush()  # once per output step, as the I/O servers do
             elif mode == "retrieve":
-                for step in range(spec.n_steps):
+                # read-mostly dissemination: every field is served read_mult
+                # times (the first round fills a cache tier when one rides
+                # above the backend; the rest are its hits)
+                reps = [
+                    (rep, step)
+                    for rep in range(max(1, spec.read_mult))
+                    for step in range(spec.n_steps)
+                ]
+                for _rep, step in reps:
                     if spec.codec_nbits is not None:
                         arrs = handle.retrieve_fields(_step_request(spec, member, step)).arrays()
                         assert arrs.shape == (
@@ -315,7 +348,10 @@ def run_hammer(fdb, spec: HammerSpec, mode: str) -> dict:
     if errors:
         raise errors[0]
     span = max(ends) - min(starts)
-    nbytes = spec.total_bytes if mode != "list" else 0
+    # bandwidths count bytes SERVED: the retrieve phase moves read_mult×
+    # the archived volume (dissemination fan-out)
+    mult = max(1, spec.read_mult) if mode == "retrieve" else 1
+    nbytes = spec.total_bytes * mult if mode != "list" else 0
     res = {
         "mode": mode,
         "io": spec.io,
@@ -324,11 +360,11 @@ def run_hammer(fdb, spec: HammerSpec, mode: str) -> dict:
         # application (pre-codec) bytes over global time — the bandwidth
         # that matters operationally (GRIB traffic is always packed)
         "bandwidth_GiBps": (nbytes / span / GiB) if nbytes else 0.0,
-        "fields": spec.fields_per_proc * spec.n_procs,
-        "us_per_field": 1e6 * span / max(1, spec.fields_per_proc * spec.n_procs),
+        "fields": spec.fields_per_proc * spec.n_procs * mult,
+        "us_per_field": 1e6 * span / max(1, spec.fields_per_proc * spec.n_procs * mult),
     }
     if spec.codec_nbits is not None and nbytes:
-        wire = spec.total_wire_bytes
+        wire = spec.total_wire_bytes * mult
         res["effective_GiBps"] = res["bandwidth_GiBps"]
         res["wire_GiBps"] = wire / span / GiB
         res["codec_ratio"] = spec.total_bytes / wire
@@ -336,9 +372,12 @@ def run_hammer(fdb, spec: HammerSpec, mode: str) -> dict:
 
 
 def sweep(spec: HammerSpec, backends=("daos", "posix"), lanes_sweep=(1, 2),
-          trace_sink: list | None = None) -> list[dict]:
+          trace_sink: list | None = None, cache_bytes: int | None = None) -> list[dict]:
     """Run the same spec through every io mode and lane count on each
-    backend (fresh backend per cell), archive then retrieve."""
+    backend (fresh backend per cell), archive then retrieve.  With
+    ``cache_bytes`` each cell runs through a dissemination cache tier and
+    reports hit rate + backend bytes saved (pair with ``spec.read_mult`` for
+    the read-mostly A/B against a cacheless run)."""
     import tempfile
 
     rows = []
@@ -348,11 +387,13 @@ def sweep(spec: HammerSpec, backends=("daos", "posix"), lanes_sweep=(1, 2),
                 cell = replace(spec, io=io, n_datasets=max(spec.n_datasets, lanes))
                 with tempfile.TemporaryDirectory() as td:
                     fdb = make_backend(backend, root=td, engine=None, lanes=lanes,
-                                       codec_nbits=spec.codec_nbits)
+                                       codec_nbits=spec.codec_nbits,
+                                       cache_bytes=cache_bytes)
                     drain = _trace_cell(fdb, f"{backend}-l{lanes}-{io}", trace_sink)
                     try:
                         w = run_hammer(fdb, cell, "archive")
                         r = run_hammer(fdb, cell, "retrieve")
+                        cache = fdb.cache_snapshot() if cache_bytes is not None else None
                     finally:
                         drain()
                         fdb.close()
@@ -363,6 +404,14 @@ def sweep(spec: HammerSpec, backends=("daos", "posix"), lanes_sweep=(1, 2),
                 if "codec_ratio" in w:
                     row["wire_GiBps_w"] = w["wire_GiBps"]
                     row["codec_ratio"] = w["codec_ratio"]
+                if cache is not None:
+                    row["hit_rate"] = cache["hit_rate"]
+                    row["bytes_served_per_backend_byte"] = (
+                        cache["bytes_served_per_backend_byte"]
+                    )
+                    row["backend_bytes_saved"] = (
+                        cache["bytes_served"]  # served without a backend round
+                    )
                 rows.append(row)
     return rows
 
@@ -539,19 +588,22 @@ def _proc_quanta(handle, spec: HammerSpec, member: int, mode: str, payload: byte
             handle.flush()  # once per output step, as the I/O servers do
             yield
         elif mode == "retrieve":
-            if spec.codec_nbits is not None:
-                arrs = handle.retrieve_fields(_step_request(spec, member, step)).arrays()
-                assert arrs.shape == (len(keys), *spec.field_shape)
-                yield
-            elif spec.io == "batched":
-                datas = handle.read_batch(keys)
-                assert all(d is not None and len(d) == spec.field_size for d in datas)
-                yield
-            else:
-                for k in keys:
-                    data = handle.read(k)
-                    assert data is not None and len(data) == spec.field_size
+            # dissemination fan-out: each repetition is its own quantum, so
+            # the scheduler interleaves the N× read rounds across processes
+            for _rep in range(max(1, spec.read_mult)):
+                if spec.codec_nbits is not None:
+                    arrs = handle.retrieve_fields(_step_request(spec, member, step)).arrays()
+                    assert arrs.shape == (len(keys), *spec.field_shape)
                     yield
+                elif spec.io == "batched":
+                    datas = handle.read_batch(keys)
+                    assert all(d is not None and len(d) == spec.field_size for d in datas)
+                    yield
+                else:
+                    for k in keys:
+                        data = handle.read(k)
+                        assert data is not None and len(data) == spec.field_size
+                        yield
         else:
             raise ValueError(mode)
 
@@ -588,24 +640,25 @@ def run_hammer_contended(fdb, spec: HammerSpec, mode: str, model) -> dict:
             since_prune = 0     # before the earliest live clock
             model.prune(heap[0][0])
     span = max(c.t for c in clients)
-    bytes_per_proc = spec.fields_per_proc * spec.field_size
+    mult = max(1, spec.read_mult) if mode == "retrieve" else 1
+    bytes_per_proc = spec.fields_per_proc * spec.field_size * mult
     per_proc = [bytes_per_proc / c.t / GiB for c in clients]
     res = {
         "mode": mode,
         "n_procs": spec.n_procs,
         "span_s": span,
-        "agg_GiBps": spec.total_bytes / span / GiB,
+        "agg_GiBps": spec.total_bytes * mult / span / GiB,
         "per_proc_GiBps": per_proc,
         "per_proc_GiBps_mean": sum(per_proc) / len(per_proc),
-        "us_per_field": 1e6 * span / max(1, spec.fields_per_proc * spec.n_procs),
+        "us_per_field": 1e6 * span / max(1, spec.fields_per_proc * spec.n_procs * mult),
     }
     if spec.codec_nbits is not None:
         # the contention model charges the WIRE bytes, but the run moved
         # total_bytes of application data: effective/wire is the codec win
-        wire = spec.total_wire_bytes
+        wire = spec.total_wire_bytes * mult
         res["effective_GiBps"] = res["agg_GiBps"]
         res["wire_GiBps"] = wire / span / GiB
-        res["codec_ratio"] = spec.total_bytes / wire
+        res["codec_ratio"] = spec.total_bytes / spec.total_wire_bytes
     return res
 
 
@@ -645,6 +698,20 @@ def find_knee(per_proc_curve: list[float], procs_list) -> int:
     return procs_list[i]
 
 
+def read_slo_knee(per_proc_curve: list[float], procs_list, floor: float) -> int:
+    """The read-side (dissemination) knee: the widest client count whose
+    per-process read bandwidth still meets *floor* — half the uncontended
+    single-client rate of the RAW backend, i.e. a fixed per-consumer
+    service level.  The cache tier moves this right: hits are served at
+    client-memory speed regardless of how many consumers pile on, so the
+    count at which per-consumer service collapses below the SLO grows."""
+    best = 0
+    for n, bw in zip(procs_list, per_proc_curve):
+        if bw >= floor:
+            best = n
+    return best
+
+
 def scaling_sweep(
     spec: HammerSpec,
     backends=("posix", "daos"),
@@ -653,33 +720,53 @@ def scaling_sweep(
     virtual: bool = True,
     out: str | None = "BENCH_contention.json",
     codec_nbits: int | None = None,
+    cache_bytes: int | None = None,
     trace_sink: list | None = None,
 ) -> dict:
     """The paper's client-scaling experiment: fresh backend + contention
     model per cell, archive then retrieve, per-proc and aggregate bandwidth
     plus latency percentiles from the metrics package; the analytical curve
     from :mod:`repro.simulation.cluster` rides along for cross-checking.
+    Cells MERGE into an existing *out* document (matching
+    :func:`remote_sweep`), so codec/cache/remote runs accumulate into one
+    BENCH artifact.
 
     ``codec_nbits`` adds a codec cell per backend (labelled
     ``"<backend>+codec<n>"``, raw cells keep their plain labels): the same
     sweep through a :class:`CodecFDB` tier, reporting effective (pre-codec)
     vs wire bandwidth and their ratio — the compression win under
-    contention."""
+    contention.
+
+    ``cache_bytes`` adds a ``"<backend>+cache"`` cell per backend: the same
+    sweep through a :class:`~repro.cache.CacheFDB` dissemination tier, with
+    hits charged at client-memory speed, reporting hit rate and bytes
+    served per backend byte (set ``spec.read_mult > 1`` for the read-mostly
+    A/B against the raw cell).  Every cell additionally reports the
+    read-side SLO knee — the widest client count whose per-proc read
+    bandwidth holds half the raw single-client rate."""
+    import os
     import tempfile
 
-    results: dict = {
-        "spec": asdict(spec),
-        "virtual_clock": virtual,
-        "procs_list": list(procs_list),
-        "codec_nbits": codec_nbits,
-        "backends": {},
-    }
-    cells: list[tuple[str, str, int | None]] = []
+    results: dict = {}
+    if out and os.path.exists(out):
+        with open(out) as f:
+            results = json.load(f)
+    results.setdefault("backends", {})
+    results.update(
+        spec=asdict(spec),
+        virtual_clock=virtual,
+        procs_list=list(procs_list),
+        codec_nbits=codec_nbits,
+        cache_bytes=cache_bytes,
+    )
+    cells: list[tuple[str, str, int | None, bool]] = []
     for backend in backends:
-        cells.append((backend, backend, None))
+        cells.append((backend, backend, None, False))
         if codec_nbits is not None:
-            cells.append((f"{backend}+codec{codec_nbits}", backend, codec_nbits))
-    for label, backend, nbits in cells:
+            cells.append((f"{backend}+codec{codec_nbits}", backend, codec_nbits, False))
+        if cache_bytes is not None:
+            cells.append((f"{backend}+cache", backend, None, True))
+    for label, backend, nbits, cached in cells:
         rows = []
         for n in procs_list:
             cell = replace(spec, n_procs=n, codec_nbits=nbits)
@@ -687,7 +774,8 @@ def scaling_sweep(
             with tempfile.TemporaryDirectory() as td:
                 stats = PosixStats(name=f"{label}-x{n}") if backend == "posix" else None
                 fdb = make_backend(backend, root=td, engine=None, stats=stats,
-                                   contention=model, codec_nbits=nbits)
+                                   contention=model, codec_nbits=nbits,
+                                   cache_bytes=cache_bytes if cached else None)
                 # spans ride the MODEL's clock: each quantum runs bound to
                 # one emulated client, so span times are that client's
                 # virtual seconds — the exported trace shows the contended
@@ -706,6 +794,8 @@ def scaling_sweep(
                     model.prune(float("inf"))
                     r = run_hammer_contended(fdb, cell, "retrieve", model)
                     r["latency"] = _latency_summary(fdb.stats_snapshot())
+                    if cached:
+                        r["cache"] = fdb.cache_snapshot()
                 finally:
                     drain()
                     fdb.close()
@@ -715,9 +805,21 @@ def scaling_sweep(
             "sweep": rows,
             "knee_n_procs": find_knee(per_proc, list(procs_list)),
             "analytic": analytic_curve(backend, procs_list, spec),
+            "read_mult": spec.read_mult,
         }
         if nbits is not None:
             results["backends"][label]["codec_nbits"] = nbits
+        if cached:
+            results["backends"][label]["cache_bytes"] = cache_bytes
+    # read-side SLO knee for this run's cells: floor = half the raw
+    # single-client read rate of each cell's base backend
+    for label, backend, _nbits, _cached in cells:
+        raw = results["backends"].get(backend, {}).get("sweep", [])
+        entry = results["backends"][label]
+        curve = [row["read"]["per_proc_GiBps_mean"] for row in entry["sweep"]]
+        floor = 0.5 * (raw[0]["read"]["per_proc_GiBps_mean"] if raw else curve[0])
+        entry["read_slo_floor_GiBps"] = floor
+        entry["read_slo_knee_n_procs"] = read_slo_knee(curve, list(procs_list), floor)
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)
@@ -908,11 +1010,25 @@ def main() -> None:
                          "step batch, N-bit codes) and decode on retrieve; "
                          "--scaling adds a '<backend>+codecN' cell per "
                          "backend reporting effective vs wire bandwidth")
+    ap.add_argument("--read-mult", type=int, default=1, metavar="N",
+                    help="read-mostly dissemination: retrieve every archived "
+                         "field N times (bandwidths count bytes served); "
+                         "works with and without --cache — the A/B cells")
+    ap.add_argument("--cache", action="store_true",
+                    help="wrap each FDB under test in the CacheFDB "
+                         "dissemination tier (sharded read-through cache + "
+                         "single-flight coalescing) and report hit rate and "
+                         "bytes served per backend byte; --scaling adds a "
+                         "'<backend>+cache' cell per backend with hits "
+                         "charged at client-memory speed")
+    ap.add_argument("--cache-bytes", type=int, default=256 << 20, metavar="B",
+                    help="cache tier byte budget for --cache (default 256 MiB)")
     args = ap.parse_args()
 
     spec = HammerSpec(n_procs=args.procs, n_steps=args.steps, n_params=args.params,
                       n_levels=args.levels, field_size=args.field_size, io=args.io,
-                      codec_nbits=args.codec_nbits)
+                      codec_nbits=args.codec_nbits, read_mult=args.read_mult)
+    cache_bytes = args.cache_bytes if args.cache else None
     trace_sink: list | None = [] if args.trace else None
 
     def publish_trace() -> None:
@@ -990,29 +1106,41 @@ def main() -> None:
         results = scaling_sweep(spec, backends=tuple(args.backends),
                                 procs_list=procs_list, out=args.out,
                                 codec_nbits=args.codec_nbits,
+                                cache_bytes=cache_bytes,
                                 trace_sink=trace_sink)
         print(f"{'backend':16s} {'procs':>5s} {'write agg':>10s} {'write/proc':>11s} "
-              f"{'read/proc':>10s} {'w p99 us':>9s} {'eff/wire':>9s}")
+              f"{'read/proc':>10s} {'w p99 us':>9s} {'eff/wire':>9s} {'hit rate':>9s}")
         for backend, data in results["backends"].items():
             for row in data["sweep"]:
                 w, r = row["write"], row["read"]
                 p99 = max((v["p99_s"] for v in w["latency"].values()), default=0.0)
                 ratio = f"{w['codec_ratio']:9.2f}" if "codec_ratio" in w else f"{'-':>9s}"
+                hits = (f"{r['cache']['hit_rate']:9.3f}" if "cache" in r
+                        else f"{'-':>9s}")
                 print(f"{backend:16s} {row['n_procs']:5d} {w['agg_GiBps']:10.3f} "
                       f"{w['per_proc_GiBps_mean']:11.3f} {r['per_proc_GiBps_mean']:10.3f} "
-                      f"{1e6 * p99:9.1f} {ratio}")
-            print(f"{backend:16s} knee at n_procs={data['knee_n_procs']}")
+                      f"{1e6 * p99:9.1f} {ratio} {hits}")
+            knee = data.get("read_slo_knee_n_procs")
+            extra = f", read SLO knee at n_procs={knee}" if knee is not None else ""
+            print(f"{backend:16s} knee at n_procs={data['knee_n_procs']}{extra}")
         print(f"\nwrote {args.out}")
         publish_trace()
         return
 
+    mult = f" x{spec.read_mult} reads" if spec.read_mult > 1 else ""
+    tier = f" (+cache {args.cache_bytes >> 20} MiB)" if args.cache else ""
     print(f"fdb-hammer: {spec.n_procs} procs x {spec.fields_per_proc} fields "
-          f"x {spec.field_size} B  ({spec.total_bytes / GiB:.3f} GiB)\n")
-    print(f"{'backend':8s} {'lanes':>5s} {'io':>8s} {'write GiB/s':>12s} {'read GiB/s':>11s} {'us/field(w)':>12s}")
+          f"x {spec.field_size} B  ({spec.total_bytes / GiB:.3f} GiB){mult}{tier}\n")
+    print(f"{'backend':8s} {'lanes':>5s} {'io':>8s} {'write GiB/s':>12s} "
+          f"{'read GiB/s':>11s} {'us/field(w)':>12s} {'hit rate':>9s} {'served/be':>10s}")
     for row in sweep(spec, backends=tuple(args.backends), lanes_sweep=tuple(args.lanes),
-                     trace_sink=trace_sink):
+                     trace_sink=trace_sink, cache_bytes=cache_bytes):
+        hits = f"{row['hit_rate']:9.3f}" if "hit_rate" in row else f"{'-':>9s}"
+        served = (f"{row['bytes_served_per_backend_byte']:10.2f}"
+                  if "bytes_served_per_backend_byte" in row else f"{'-':>10s}")
         print(f"{row['backend']:8s} {row['lanes']:5d} {row['io']:>8s} "
-              f"{row['write_GiBps']:12.3f} {row['read_GiBps']:11.3f} {row['us_per_field_w']:12.1f}")
+              f"{row['write_GiBps']:12.3f} {row['read_GiBps']:11.3f} "
+              f"{row['us_per_field_w']:12.1f} {hits} {served}")
     publish_trace()
 
 

@@ -37,6 +37,15 @@ composition of the four facades, nested arbitrarily:
     self-describing payloads lazily — a hot DAOS tier can pack at 16 bits
     while the cold POSIX archive keeps 24, declaratively per tier.
 
+``{"type": "cache", "max_bytes": N, "ttl_s": S, "inner": {...}}``
+    a :class:`~repro.cache.CacheFDB` read-through dissemination tier:
+    consistent-hash sharded in-memory chunk cache (LRU by byte budget,
+    per-dataset TTL via ``dataset_ttl: [{"match": ..., "ttl_s": ...}]``,
+    layout knobs ``shards``/``replicas``) with single-flight coalescing —
+    N concurrent identical retrieves cost one inner round — and write-path
+    invalidation on ``archive``/``archive_fields``/``wipe``.  Composes
+    above select/codec/async/remote unchanged.
+
 Any node may additionally carry ``"trace": true`` (or a mapping with
 ``capacity`` / ``slow_op_s`` / ``slow_capacity``): a
 :class:`~repro.obs.Tracer` is built and installed on the whole subtree via
@@ -306,7 +315,7 @@ register_backend(
 # Validation + JSON round-trip
 # ---------------------------------------------------------------------------
 
-_TYPES = ("local", "select", "dist", "async", "codec", "remote")
+_TYPES = ("local", "select", "dist", "async", "codec", "remote", "cache")
 
 
 def _config_type(cfg: Mapping) -> str:
@@ -396,6 +405,26 @@ def validate_config(config: Mapping) -> None:
             raise ConfigError(
                 f"codec nbits must be an int in [1, 32], got {nbits!r}"
             )
+        validate_config(config["inner"])
+    elif t == "cache":
+        if config.get("inner") is None:
+            raise ConfigError("cache config requires 'inner'")
+        mb = config.get("max_bytes")
+        if mb is not None and (not isinstance(mb, int) or isinstance(mb, bool) or mb < 1):
+            raise ConfigError(f"cache max_bytes must be a positive int, got {mb!r}")
+        for knob in ("shards", "replicas"):
+            v = config.get(knob)
+            if v is not None and (not isinstance(v, int) or isinstance(v, bool) or v < 1):
+                raise ConfigError(f"cache {knob!r} must be a positive int, got {v!r}")
+        ttl = config.get("ttl_s")
+        if ttl is not None and (not isinstance(ttl, (int, float)) or isinstance(ttl, bool) or ttl < 0):
+            raise ConfigError(f"cache ttl_s must be a non-negative number, got {ttl!r}")
+        rules = config.get("dataset_ttl", ())
+        if not isinstance(rules, (list, tuple)):
+            raise ConfigError("cache 'dataset_ttl' must be a list")
+        for rule in rules:
+            if not isinstance(rule, Mapping) or "match" not in rule or "ttl_s" not in rule:
+                raise ConfigError("each cache dataset_ttl rule needs 'match' and 'ttl_s'")
         validate_config(config["inner"])
     elif t == "remote":
         addr, inner = config.get("addr"), config.get("inner")
@@ -548,6 +577,8 @@ def build_fdb(config: Mapping) -> FDBClient:
         return _build_codec(config)
     if t == "remote":
         return _build_remote(config)
+    if t == "cache":
+        return _build_cache(config)
     return _build_async(config)
 
 
@@ -661,6 +692,26 @@ def _build_codec(cfg: Mapping) -> FDBClient:
         # beneath it; a prebuilt pass-through inner stays caller-owned
         owns = cfg.get("owns_inner", not isinstance(inner_cfg, FDBClient))
         return CodecFDB(inner, nbits=cfg.get("nbits", 16), owns_inner=owns)
+    except BaseException:
+        _close_built([inner_cfg], [inner])
+        raise
+
+
+def _build_cache(cfg: Mapping) -> FDBClient:
+    from ..cache import CacheFDB
+
+    inner_cfg = cfg["inner"]
+    inner = build_fdb(inner_cfg)
+    try:
+        kw = {
+            k: cfg[k]
+            for k in ("max_bytes", "ttl_s", "dataset_ttl", "shards", "replicas")
+            if k in cfg
+        }
+        # same ownership rule as async/codec: the tier owns what the config
+        # built beneath it; a prebuilt pass-through inner stays caller-owned
+        owns = cfg.get("owns_inner", not isinstance(inner_cfg, FDBClient))
+        return CacheFDB(inner, owns_inner=owns, **kw)
     except BaseException:
         _close_built([inner_cfg], [inner])
         raise

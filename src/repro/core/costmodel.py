@@ -26,9 +26,23 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-__all__ = ["LustreCosts", "DaosCosts", "DEFAULT_LUSTRE", "DEFAULT_DAOS"]
+__all__ = [
+    "LustreCosts",
+    "DaosCosts",
+    "DEFAULT_LUSTRE",
+    "DEFAULT_DAOS",
+    "CACHE_HIT_S",
+    "CACHE_BW_Bps",
+]
 
 GiB = float(1 << 30)
+
+# Client-side read-cache tier (repro.cache): a hit never leaves the client
+# node — no lock round-trips, no OST/engine queueing, just a local memory
+# copy.  Fixed lookup overhead plus single-thread DRAM copy bandwidth;
+# these are per-CLIENT serial costs, there is no shared service centre.
+CACHE_HIT_S = 1.5e-6
+CACHE_BW_Bps = 10.0 * GiB
 
 
 @dataclass(frozen=True)

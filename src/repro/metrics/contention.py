@@ -45,7 +45,14 @@ import threading
 import time
 from contextlib import contextmanager
 
-from repro.core.costmodel import DEFAULT_DAOS, DEFAULT_LUSTRE, DaosCosts, LustreCosts
+from repro.core.costmodel import (
+    CACHE_BW_Bps,
+    CACHE_HIT_S,
+    DEFAULT_DAOS,
+    DEFAULT_LUSTRE,
+    DaosCosts,
+    LustreCosts,
+)
 
 __all__ = [
     "ClientClock",
@@ -173,6 +180,15 @@ class ContentionModel:
         if not self.virtual and latency > 0.0:
             time.sleep(latency * self.sleep_scale)
         return latency
+
+    def cache_hit(self, nbytes: int) -> float:
+        """The cache tier of the model: a read served from the client-side
+        dissemination cache (:mod:`repro.cache`) touches NO shared service
+        centre — the client pays only a fixed lookup plus its local DRAM
+        copy time.  This is exactly why the read-side knee moves right in
+        ``fdb_hammer --scaling``: hits take this path instead of queueing
+        at the lock/OST/engine timelines."""
+        return self.submit([], CACHE_HIT_S + nbytes / CACHE_BW_Bps)
 
     def prune(self, horizon: float) -> None:
         """Drop busy intervals ending before *horizon* (call with the

@@ -1,0 +1,771 @@
+"""CacheFDB — the read-through dissemination cache (paper §1: write-once
+read-many-millions).
+
+Four contracts, asserted:
+
+- **equivalence**: ``CacheFDB(inner)`` is byte-for-byte ``inner`` for
+  retrieve/retrieve_many/list/wipe on BOTH backends, including post-wipe,
+  post-re-archive and lazy codec'd ``DecodedFieldSet`` reads;
+- **single-flight**: N concurrent identical retrieves cost exactly one
+  backend round; followers observe leader errors (never cached); distinct
+  keys do not serialise behind each other;
+- **write ordering**: over AsyncFDB, a read of a key archived through the
+  facade drains+publishes the pending write first (no stale
+  read-your-writes), while clean cached keys skip the barrier;
+- **the dissemination claim**: the read-mostly scaling sweep holds
+  hit_rate >= 0.9 and >= 5x bytes-served-per-backend-byte at the widest
+  client count, and the read-side SLO knee moves right of the raw backend.
+"""
+
+import json
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+from fdb_hammer import (  # noqa: E402
+    HammerSpec,
+    make_backend,
+    run_hammer,
+    read_slo_knee,
+    scaling_sweep,
+    sweep,
+)
+
+from repro.cache import (  # noqa: E402
+    CacheFDB,
+    CacheShard,
+    HashRing,
+    ShardedCache,
+    SingleFlight,
+)
+from repro.core import (  # noqa: E402
+    AsyncFDB,
+    CodecFDB,
+    FDBConfig,
+    Key,
+    NWP_SCHEMA_DAOS,
+    NWP_SCHEMA_POSIX,
+    build_fdb,
+    make_fdb,
+)
+from repro.core.client import FDBClient  # noqa: E402
+from repro.core.config import ConfigError  # noqa: E402
+from repro.core.daos import DaosEngine  # noqa: E402
+
+
+def example_key(**over) -> Key:
+    base = dict(
+        **{"class": "od"}, stream="oper", expver="0001", date="20231201", time="1200",
+        type="ef", levtype="sfc", number="1", levelist="1", step="1", param="v",
+    )
+    base.update(over)
+    return Key(base)
+
+
+@pytest.fixture(params=["daos", "posix"])
+def mk(request, tmp_path):
+    """Factory for handles over ONE shared storage (plain + cached views)."""
+    if request.param == "daos":
+        eng = DaosEngine()
+        return lambda: make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=eng)
+    root = str(tmp_path / "fdb")
+    return lambda: make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=root)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def run_threads(n, fn):
+    """Run fn(i) on n threads; returns (results, errors) per thread."""
+    results, errors = [None] * n, [None] * n
+    barrier = threading.Barrier(n)
+
+    def wrap(i):
+        barrier.wait()
+        try:
+            results[i] = fn(i)
+        except Exception as e:  # noqa: BLE001
+            errors[i] = e
+
+    threads = [threading.Thread(target=wrap, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return results, errors
+
+
+def poll(predicate, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while not predicate():
+        if time.monotonic() > deadline:
+            raise AssertionError("condition not reached in time")
+        time.sleep(0.001)
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: CacheFDB(inner) == inner, byte for byte
+# ---------------------------------------------------------------------------
+
+class TestEquivalence:
+    def test_retrieve_and_batch(self, mk):
+        plain, cached = mk(), CacheFDB(mk(), owns_inner=True)
+        keys = [example_key(step=str(s), param=p)
+                for s in range(3) for p in ("u", "v", "t")]
+        for i, k in enumerate(keys):
+            cached.archive(k, f"payload-{i}".encode())
+        cached.flush()
+        for _round in (1, 2):  # round 2 is served from the cache
+            for k in keys:
+                assert cached.read(k) == plain.read(k)
+            assert cached.read_batch(keys) == plain.read_batch(keys)
+        assert cached.cache_snapshot()["hits"] >= len(keys)
+        # absent fields are None on both sides and never negative-cached:
+        # the second absent read is ANOTHER miss, not a cached None
+        absent = example_key(param="zz")
+        assert cached.read(absent) is None and plain.read(absent) is None
+        assert cached.read(absent) is None
+        assert cached.cache_snapshot()["misses"] == len(keys) + 2
+        plain.close()
+        cached.close()
+
+    def test_retrieve_many_exact_and_partial(self, mk):
+        plain, cached = mk(), CacheFDB(mk(), owns_inner=True)
+        keys = [example_key(step=str(s), param=p)
+                for s in range(3) for p in ("u", "v")]
+        for i, k in enumerate(keys):
+            cached.archive(k, f"f{i}".encode())
+        cached.flush()
+        exact = {**dict(example_key()),
+                 "step": ["0", "1", "2"], "param": ["u", "v"]}
+        assert cached.retrieve_many(exact).read_all() == plain.retrieve_many(exact).read_all()
+        # partial request: resolved via the catalogue, memoised + coalesced
+        partial = {"class": "od", "stream": "oper", "expver": "0001",
+                   "date": "20231201", "time": "1200", "step": "1"}
+        got = cached.retrieve_many(partial).read_all()
+        assert got == plain.retrieve_many(partial).read_all() and got
+        assert cached.retrieve_many(partial).read_all() == got
+        assert cached.cache_stats.ops["cache_list_hit"] >= 1
+        assert cached.cache_stats.ops["cache_list_fill"] == 1
+        plain.close()
+        cached.close()
+
+    def test_list_equivalence(self, mk):
+        plain, cached = mk(), CacheFDB(mk(), owns_inner=True)
+        for s in range(4):
+            cached.archive(example_key(step=str(s)), b"x" * 16)
+        cached.flush()
+        req = {"class": "od", "stream": "oper", "expver": "0001",
+               "date": "20231201", "time": "1200"}
+        ours = {tuple(sorted(e.key.items())) for e in cached.list(req)}
+        theirs = {tuple(sorted(e.key.items())) for e in plain.list(req)}
+        assert ours == theirs and len(ours) == 4
+        plain.close()
+        cached.close()
+
+    def test_re_archive_serves_new_bytes(self, mk):
+        plain, cached = mk(), CacheFDB(mk(), owns_inner=True)
+        k = example_key()
+        cached.archive(k, b"old")
+        cached.flush()
+        assert cached.read(k) == b"old"
+        cached.archive(k, b"new")
+        cached.flush()
+        assert cached.read(k) == b"new" == plain.read(k)
+        plain.close()
+        cached.close()
+
+    def test_wipe_never_serves_stale_chunks(self, mk):
+        plain, cached = mk(), CacheFDB(mk(), owns_inner=True)
+        keys = [example_key(step=str(s)) for s in range(4)]
+        for k in keys:
+            cached.archive(k, b"y" * 32)
+        cached.flush()
+        for k in keys:
+            assert cached.read(k) is not None  # fill the cache
+        report = cached.wipe({"class": "od", "stream": "oper", "expver": "0001",
+                              "date": "20231201", "time": "1200"})
+        assert report.entries_removed > 0 and report.datasets
+        for k in keys:
+            assert cached.read(k) is None and plain.read(k) is None
+        # re-archive after the wipe: fresh bytes, not resurrected ones
+        cached.archive(keys[0], b"fresh")
+        cached.flush()
+        assert cached.read(keys[0]) == b"fresh" == plain.read(keys[0])
+        plain.close()
+        cached.close()
+
+    def test_codec_decoded_fieldset_byte_equivalence(self, mk):
+        plain = CodecFDB(mk(), nbits=16, owns_inner=True)
+        cached = CacheFDB(CodecFDB(mk(), nbits=16, owns_inner=True), owns_inner=True)
+        keys = [example_key(param=p) for p in ("u", "v", "t", "q")]
+        rng = np.random.default_rng(7)
+        fields = (rng.standard_normal((4, 8, 128)) * 40 + 250).astype(np.float32)
+        cached.archive_fields(keys, fields)
+        cached.flush()
+        req = {**dict(example_key()), "param": ["u", "v", "t", "q"]}
+        ref = plain.retrieve_fields(req).arrays()
+        first = cached.retrieve_fields(req).arrays()   # fills (wire payloads)
+        again = cached.retrieve_fields(req).arrays()   # decodes from the cache
+        np.testing.assert_array_equal(first, ref)
+        np.testing.assert_array_equal(again, ref)
+        assert cached.cache_snapshot()["hits"] >= len(keys)
+        for k in keys:  # the cached wire payload itself is byte-for-byte
+            assert cached.read(k) == plain.read(k)
+        plain.close()
+        cached.close()
+
+    def test_invalidate_all_for_external_writers(self, mk):
+        plain, cached = mk(), CacheFDB(mk(), owns_inner=True)
+        k = example_key()
+        cached.archive(k, b"v1")
+        cached.flush()
+        assert cached.read(k) == b"v1"
+        plain.archive(k, b"v2")  # an EXTERNAL writer the facade cannot see
+        plain.flush()
+        assert cached.read(k) == b"v1"  # documented: coherence is per-facade
+        assert cached.invalidate_all() >= 1
+        assert cached.read(k) == b"v2"
+        plain.close()
+        cached.close()
+
+    def test_backend_bytes_never_double_counted(self, tmp_path):
+        fdb = CacheFDB(make_fdb("posix", schema=NWP_SCHEMA_POSIX,
+                                root=str(tmp_path / "f")), owns_inner=True)
+        keys = [example_key(step=str(s)) for s in range(4)]
+        for k in keys:
+            fdb.archive(k, b"z" * 100)
+        fdb.flush()
+        fdb.read_batch(keys)  # fills: backend pays once
+        backend_reads = sum(s.bytes_read for s in fdb.io_stats())
+        fdb.read_batch(keys)  # hits: backend pays NOTHING more
+        assert sum(s.bytes_read for s in fdb.io_stats()) == backend_reads
+        snap = fdb.cache_snapshot()
+        assert snap["bytes_served"] == 400 and snap["bytes_backend"] == 400
+        assert snap["bytes_served_per_backend_byte"] == pytest.approx(2.0)
+        fdb.close()
+
+
+# ---------------------------------------------------------------------------
+# Single-flight coalescing
+# ---------------------------------------------------------------------------
+
+class GatedInner(FDBClient):
+    """Delegating client whose ``retrieve_batch`` blocks on a gate and
+    records every backend round — the probe for coalescing tests."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.schema = inner.schema
+        self._fieldset_batch = inner._fieldset_batch
+        self.gate = threading.Event()
+        self.gate.set()
+        self.calls: list[list[Key]] = []
+        self.fail = False
+
+    def archive(self, key, data):
+        self.inner.archive(key, data)
+
+    def retrieve_batch(self, keys):
+        self.calls.append(list(keys))
+        self.gate.wait(10.0)
+        if self.fail:
+            raise RuntimeError("backend down")
+        return self.inner.retrieve_batch(keys)
+
+    def flush(self):
+        self.inner.flush()
+
+    def _list(self, request):
+        return self.inner._list(request)
+
+    def _wipe_dataset(self, dataset_key, entries=None):
+        return self.inner._wipe_dataset(dataset_key, entries)
+
+    def io_stats(self):
+        return self.inner.io_stats()
+
+    def close(self):
+        self.inner.close()
+
+
+@pytest.fixture
+def gated(tmp_path):
+    inner = GatedInner(make_fdb("posix", schema=NWP_SCHEMA_POSIX,
+                                root=str(tmp_path / "f")))
+    cache = CacheFDB(inner, owns_inner=True)
+    yield inner, cache
+    inner.gate.set()
+    cache.close()
+
+
+class TestSingleFlightFDB:
+    def test_n_concurrent_retrieves_one_backend_round(self, gated):
+        inner, cache = gated
+        k = example_key()
+        cache.archive(k, b"the-field")
+        cache.flush()
+        inner.calls.clear()
+        inner.gate.clear()
+        leader_out = [None]
+
+        # leader enters the (gated) backend first, then followers pile on
+        lead = threading.Thread(
+            target=lambda: leader_out.__setitem__(0, cache.read(k)))
+        lead.start()
+        poll(lambda: len(inner.calls) == 1)
+        follower_out = [None] * 4
+
+        def follow(i):
+            follower_out[i] = cache.read(k)
+
+        fthreads = [threading.Thread(target=follow, args=(i,)) for i in range(4)]
+        for t in fthreads:
+            t.start()
+        time.sleep(0.1)  # let every follower join the in-flight round
+        inner.gate.set()
+        lead.join(10.0)
+        for t in fthreads:
+            t.join(10.0)
+        assert len(inner.calls) == 1, "coalescing failed: extra backend round"
+        assert leader_out[0] == b"the-field"
+        assert follower_out == [b"the-field"] * 4
+        snap = cache.cache_snapshot()
+        assert snap["misses"] == 1
+        assert snap["hits"] + snap["coalesced"] == 4
+
+    def test_leader_error_propagates_and_is_not_cached(self, gated):
+        inner, cache = gated
+        k = example_key()
+        cache.archive(k, b"ok-bytes")
+        cache.flush()
+        inner.calls.clear()
+        inner.fail = True
+        inner.gate.clear()
+        lead_err = [None]
+
+        def lead():
+            try:
+                cache.read(k)
+            except Exception as e:  # noqa: BLE001
+                lead_err[0] = e
+
+        t = threading.Thread(target=lead)
+        t.start()
+        poll(lambda: len(inner.calls) == 1)
+        follower_err = [None] * 3
+
+        def follow(i):
+            try:
+                cache.read(k)
+            except Exception as e:  # noqa: BLE001
+                follower_err[i] = e
+
+        fthreads = [threading.Thread(target=follow, args=(i,)) for i in range(3)]
+        for ft in fthreads:
+            ft.start()
+        time.sleep(0.1)
+        inner.gate.set()
+        t.join(10.0)
+        for ft in fthreads:
+            ft.join(10.0)
+        assert len(inner.calls) == 1
+        assert isinstance(lead_err[0], RuntimeError)
+        assert all(isinstance(e, RuntimeError) for e in follower_err)
+        # the failure is NOT a cached exception: the next read pays a fresh
+        # (now healthy) backend round and succeeds
+        inner.fail = False
+        assert cache.read(k) == b"ok-bytes"
+        assert len(inner.calls) == 2
+
+    def test_distinct_keys_do_not_serialise(self, gated):
+        inner, cache = gated
+        k1, k2, k3 = (example_key(param=p) for p in ("u", "v", "t"))
+        for k in (k1, k2, k3):
+            cache.archive(k, bytes(dict(k)["param"], "ascii") * 8)
+        cache.flush()
+        assert cache.read(k3) is not None  # pre-warm k3
+        inner.calls.clear()
+        inner.gate.clear()
+        out = {}
+        t1 = threading.Thread(target=lambda: out.__setitem__("k1", cache.read(k1)))
+        t2 = threading.Thread(target=lambda: out.__setitem__("k2", cache.read(k2)))
+        t1.start()
+        t2.start()
+        # BOTH leaders reach the backend while the gate is closed: neither
+        # queued behind the other's flight
+        poll(lambda: len(inner.calls) == 2)
+        # and a cached key is served while both rounds are still blocked
+        assert cache.read(k3) == b"tttttttt"
+        inner.gate.set()
+        t1.join(10.0)
+        t2.join(10.0)
+        assert out["k1"] == b"uuuuuuuu" and out["k2"] == b"vvvvvvvv"
+
+    def test_request_resolution_coalesces(self, gated):
+        inner, cache = gated
+        for s in range(3):
+            cache.archive(example_key(step=str(s)), b"r" * 8)
+        cache.flush()
+        partial = {"class": "od", "stream": "oper", "expver": "0001",
+                   "date": "20231201", "time": "1200"}
+        results, errors = run_threads(
+            6, lambda i: cache.retrieve_many(partial).read_all())
+        assert not any(errors)
+        assert all(len(r) == 3 for r in results)
+        ops = cache.cache_stats.ops
+        assert ops["cache_list_fill"] == 1
+        assert ops["cache_list_hit"] + ops["cache_list_coalesced"] == 5
+
+
+class TestSingleFlightUnit:
+    def test_leader_election_and_value(self):
+        sf = SingleFlight()
+        f1, lead1 = sf.join("k")
+        f2, lead2 = sf.join("k")
+        assert lead1 and not lead2 and f2 is f1
+        assert sf.inflight() == 1
+        sf.complete("k", f1, value=b"v")
+        assert sf.wait(f1) == b"v" and sf.wait(f2) == b"v"
+        assert sf.inflight() == 0
+        _, lead3 = sf.join("k")
+        assert lead3  # outcomes are not cached across flights
+
+    def test_error_propagates_once(self):
+        sf = SingleFlight()
+        f, _ = sf.join("k")
+        sf.complete("k", f, error=RuntimeError("boom"))
+        with pytest.raises(RuntimeError, match="boom"):
+            sf.wait(f)
+        _, lead = sf.join("k")
+        assert lead  # errors are never cached
+
+    def test_wait_timeout(self):
+        sf = SingleFlight()
+        f, _ = sf.join("k")
+        with pytest.raises(TimeoutError):
+            sf.wait(f, timeout=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Async write ordering (the read barrier)
+# ---------------------------------------------------------------------------
+
+class TestAsyncOrdering:
+    def test_no_stale_read_after_async_archive(self, tmp_path):
+        inner = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "f"))
+        cache = CacheFDB(AsyncFDB(inner, writers=2, owns_fdb=True), owns_inner=True)
+        k, clean = example_key(), example_key(param="u")
+        cache.archive(k, b"old")
+        cache.archive(clean, b"other")
+        cache.flush()
+        assert cache.read(k) == b"old"        # cached
+        assert cache.read(clean) == b"other"  # cached
+        cache.archive(k, b"new")  # queued on the async writers; k is dirty
+        # a clean cached key skips the barrier: served while the write is
+        # still pending (the dirty set stays non-empty)
+        assert cache.read(clean) == b"other"
+        with cache._mu:
+            assert cache._dirty
+        # the dirty key pays the barrier: the facade flushes the async queue
+        # and the deferred-visibility backend BEFORE serving — read-your-
+        # writes without a caller flush()
+        assert cache.read(k) == b"new"
+        with cache._mu:
+            assert not cache._dirty
+        cache.close()
+
+    def test_drain_alone_does_not_clear_the_barrier(self, tmp_path):
+        inner = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "f"))
+        cache = CacheFDB(AsyncFDB(inner, writers=2, owns_fdb=True), owns_inner=True)
+        k = example_key()
+        cache.archive(k, b"v1")
+        cache.drain()  # bytes landed, but POSIX publishes only at flush
+        with cache._mu:
+            assert cache._dirty  # still dirty: visibility is not persistence
+        assert cache.read(k) == b"v1"  # barrier flushes, then serves
+        cache.close()
+
+    def test_partial_request_sees_pending_archives(self, tmp_path):
+        inner = make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "f"))
+        cache = CacheFDB(AsyncFDB(inner, writers=2, owns_fdb=True), owns_inner=True)
+        for s in range(3):
+            cache.archive(example_key(step=str(s)), b"p" * 8)
+        # NO caller flush: the listing must include all three pending fields
+        partial = {"class": "od", "stream": "oper", "expver": "0001",
+                   "date": "20231201", "time": "1200"}
+        got = cache.retrieve_many(partial).read_all()
+        assert len(got) == 3 and all(v == b"p" * 8 for v in got.values())
+        cache.close()
+
+
+# ---------------------------------------------------------------------------
+# TTL, LRU, sharding
+# ---------------------------------------------------------------------------
+
+class TestTTL:
+    def test_default_ttl_expires_entries(self, tmp_path):
+        clk = FakeClock()
+        cache = CacheFDB(make_fdb("posix", schema=NWP_SCHEMA_POSIX,
+                                  root=str(tmp_path / "f")),
+                         ttl_s=10.0, clock=clk, owns_inner=True)
+        k = example_key()
+        cache.archive(k, b"ttl-bytes")
+        cache.flush()
+        assert cache.read(k) == b"ttl-bytes"  # fill at t=0
+        clk.t = 9.0
+        assert cache.read(k) == b"ttl-bytes"  # hit inside the TTL
+        clk.t = 10.0
+        assert cache.read(k) == b"ttl-bytes"  # expired -> refetched
+        snap = cache.cache_snapshot()
+        assert snap["misses"] == 2 and snap["hits"] == 1
+        cache.close()
+
+    def test_dataset_ttl_rules_override_default(self, tmp_path):
+        clk = FakeClock()
+        cache = CacheFDB(
+            make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / "f")),
+            ttl_s=None,  # default: never expires
+            dataset_ttl=[{"match": {"class": "od"}, "ttl_s": 5.0}],
+            clock=clk, owns_inner=True,
+        )
+        hot, cold = example_key(), example_key(**{"class": "rd"})
+        cache.archive(hot, b"hot")
+        cache.archive(cold, b"cold")
+        cache.flush()
+        assert cache.read(hot) == b"hot" and cache.read(cold) == b"cold"
+        clk.t = 6.0
+        assert cache.read(hot) == b"hot"    # expired by the od rule
+        assert cache.read(cold) == b"cold"  # no rule matched: still cached
+        snap = cache.cache_snapshot()
+        assert snap["misses"] == 3 and snap["hits"] == 1
+        cache.close()
+
+
+class TestShard:
+    def test_lru_evicts_oldest_access_first(self):
+        shard = CacheShard(100, clock=FakeClock())
+        shard.put("a", b"x" * 40, "ds", None)
+        shard.put("b", b"y" * 40, "ds", None)
+        assert shard.get("a")[1] == "hit"  # touch a: b is now LRU
+        inserted, n_ev, ev_bytes = shard.put("c", b"z" * 40, "ds", None)
+        assert inserted and n_ev == 1 and ev_bytes == 40
+        assert shard.get("b") == (None, "miss")
+        assert shard.get("a")[1] == "hit" and shard.get("c")[1] == "hit"
+        assert shard.nbytes == 80
+
+    def test_oversized_entry_refused(self):
+        shard = CacheShard(100, clock=FakeClock())
+        shard.put("a", b"x" * 40, "ds", None)
+        assert shard.put("big", b"!" * 200, "ds", None) == (False, 0, 0)
+        assert shard.get("a")[1] == "hit"  # nothing was evicted for it
+
+    def test_generation_guard_refuses_stale_fill(self):
+        shard = CacheShard(100, clock=FakeClock())
+        gen = shard.generation()   # snapshot BEFORE the (emulated) fetch
+        shard.invalidate("a")      # a write races the fill
+        inserted, _, _ = shard.put("a", b"stale", "ds", None, expected_gen=gen)
+        assert not inserted
+        assert shard.get("a") == (None, "miss")
+        # a fresh fill with the current generation lands
+        inserted, _, _ = shard.put("a", b"fresh", "ds", None,
+                                   expected_gen=shard.generation())
+        assert inserted and shard.get("a") == (b"fresh", "hit")
+
+    def test_dataset_invalidation_drops_exactly_the_dataset(self):
+        cache = ShardedCache(1 << 20, n_shards=4, clock=FakeClock())
+        for i in range(16):
+            cache.put(f"a{i}", b"A" * 8, "ds-a", None)
+            cache.put(f"b{i}", b"B" * 8, "ds-b", None)
+        assert len(cache) == 32
+        assert cache.invalidate_dataset("ds-a") == 16
+        assert len(cache) == 16
+        for i in range(16):
+            assert cache.get(f"a{i}")[1] == "miss"
+            assert cache.get(f"b{i}")[1] == "hit"
+
+    def test_hashring_deterministic_and_spread(self):
+        r1, r2 = HashRing(8), HashRing(8)
+        tokens = [f"class=od;param={i};step={i % 7}" for i in range(1000)]
+        placements = [r1.shard_for(t) for t in tokens]
+        assert placements == [r2.shard_for(t) for t in tokens]  # seed-stable
+        counts = [placements.count(s) for s in range(8)]
+        assert all(c > 0 for c in counts)       # every shard carries load
+        assert max(counts) < 0.5 * len(tokens)  # no shard owns the ring
+        with pytest.raises(ValueError):
+            HashRing(0)
+
+    def test_eviction_shows_up_in_snapshot(self, tmp_path):
+        cache = CacheFDB(make_fdb("posix", schema=NWP_SCHEMA_POSIX,
+                                  root=str(tmp_path / "f")),
+                         max_bytes=256, shards=1, owns_inner=True)
+        keys = [example_key(step=str(s)) for s in range(4)]
+        for k in keys:
+            cache.archive(k, b"e" * 100)
+        cache.flush()
+        for k in keys:  # 4 x 100 B through a 256 B budget: must evict
+            assert cache.read(k) == b"e" * 100
+        snap = cache.cache_snapshot()
+        assert snap["evictions"] >= 2
+        assert snap["bytes_cached"] <= 256
+        cache.close()
+
+
+# ---------------------------------------------------------------------------
+# Config grammar
+# ---------------------------------------------------------------------------
+
+class TestCacheConfig:
+    def test_build_and_json_roundtrip(self, tmp_path):
+        cfg = {"type": "cache", "max_bytes": 1 << 20, "ttl_s": 30.0,
+               "dataset_ttl": [{"match": {"class": "od"}, "ttl_s": 5.0}],
+               "shards": 4,
+               "inner": {"backend": "posix", "schema": "nwp-posix",
+                         "root": str(tmp_path / "f")}}
+        again = FDBConfig.from_json(FDBConfig(cfg).to_json(indent=2))
+        assert again.to_dict() == FDBConfig(cfg).to_dict()
+        with build_fdb(cfg) as fdb:
+            assert isinstance(fdb, CacheFDB)
+            fdb.archive(example_key(), b"cfg-bytes")
+            fdb.flush()
+            assert fdb.read(example_key()) == b"cfg-bytes"
+            assert fdb.read(example_key()) == b"cfg-bytes"
+            assert fdb.cache_snapshot()["hits"] == 1
+
+    @pytest.mark.parametrize("bad", [
+        {"type": "cache"},                                      # no inner
+        {"type": "cache", "inner": {"backend": "posix"}, "max_bytes": 0},
+        {"type": "cache", "inner": {"backend": "posix"}, "max_bytes": True},
+        {"type": "cache", "inner": {"backend": "posix"}, "ttl_s": -1},
+        {"type": "cache", "inner": {"backend": "posix"}, "shards": -2},
+        {"type": "cache", "inner": {"backend": "posix"},
+         "dataset_ttl": {"match": {}}},                         # not a list
+        {"type": "cache", "inner": {"backend": "posix"},
+         "dataset_ttl": [{"ttl_s": 5}]},                        # no match
+    ])
+    def test_invalid_configs_rejected(self, bad):
+        with pytest.raises(ConfigError):
+            build_fdb(bad)
+
+
+# ---------------------------------------------------------------------------
+# The dissemination claim: read-mostly scaling with the cache tier
+# ---------------------------------------------------------------------------
+
+PROCS = (1, 2, 4, 8, 16)
+READ_SPEC = HammerSpec(n_steps=2, n_params=3, n_levels=2, io="batched",
+                       read_mult=10)
+
+
+@pytest.fixture(scope="module")
+def cache_sweep():
+    # one sweep produces BOTH the raw posix cells and the posix+cache cells
+    return scaling_sweep(READ_SPEC, backends=("posix",), procs_list=PROCS,
+                         out=None, cache_bytes=1 << 30)
+
+
+class TestDisseminationScaling:
+    def test_hit_rate_and_backend_bytes_saved(self, cache_sweep):
+        rows = cache_sweep["backends"]["posix+cache"]["sweep"]
+        for row in rows:
+            snap = row["read"]["cache"]
+            assert snap["hit_rate"] >= 0.9, snap
+        widest = rows[-1]["read"]["cache"]
+        assert widest["bytes_served_per_backend_byte"] >= 5.0, widest
+
+    def test_read_slo_knee_moves_right(self, cache_sweep):
+        raw = cache_sweep["backends"]["posix"]
+        cached = cache_sweep["backends"]["posix+cache"]
+        assert cached["read_slo_knee_n_procs"] > raw["read_slo_knee_n_procs"]
+        # both knees are against the SAME floor (half the raw single-client
+        # rate), so the comparison is apples to apples
+        assert cached["read_slo_floor_GiBps"] == raw["read_slo_floor_GiBps"]
+        # and the cached per-consumer read rate dominates raw at every width
+        for rr, cr in zip(raw["sweep"], cached["sweep"]):
+            assert (cr["read"]["per_proc_GiBps_mean"]
+                    > rr["read"]["per_proc_GiBps_mean"])
+
+    def test_read_slo_knee_helper(self):
+        assert read_slo_knee([4.0, 3.0, 1.0, 0.4], (1, 2, 4, 8), 2.0) == 2
+        assert read_slo_knee([4.0, 3.0, 2.5, 2.1], (1, 2, 4, 8), 2.0) == 8
+        assert read_slo_knee([1.0], (1,), 2.0) == 0
+
+    def test_bench_json_merges_cache_cells(self, tmp_path):
+        out = tmp_path / "BENCH_contention.json"
+        spec = HammerSpec(n_steps=1, n_params=2, n_levels=2, io="batched")
+        scaling_sweep(spec, backends=("posix",), procs_list=(1, 2), out=str(out))
+        scaling_sweep(replace_read_mult(spec, 4), backends=("posix",),
+                      procs_list=(1, 2), out=str(out), cache_bytes=1 << 26)
+        data = json.loads(out.read_text())
+        assert "posix" in data["backends"] and "posix+cache" in data["backends"]
+        cell = data["backends"]["posix+cache"]
+        assert cell["cache_bytes"] == 1 << 26 and cell["read_mult"] == 4
+        for row in cell["sweep"]:
+            assert row["read"]["cache"]["hit_rate"] == pytest.approx(0.75)
+        for label in ("posix", "posix+cache"):
+            assert data["backends"][label]["read_slo_knee_n_procs"] >= 1
+
+
+def replace_read_mult(spec, read_mult):
+    from dataclasses import replace
+    return replace(spec, read_mult=read_mult)
+
+
+class TestReadMultHammer:
+    def test_run_hammer_counts_served_bytes(self, tmp_path):
+        spec = HammerSpec(n_procs=1, n_steps=1, n_params=2, n_levels=2,
+                          io="batched", read_mult=3)
+        fdb = make_backend("posix", root=str(tmp_path), cache_bytes=1 << 26)
+        run_hammer(fdb, spec, "archive")
+        r = run_hammer(fdb, spec, "retrieve")
+        assert r["fields"] == 4 * 3  # bandwidths count bytes SERVED
+        snap = fdb.cache_snapshot()
+        assert snap["misses"] == 4 and snap["hits"] == 8
+        fdb.close()
+
+    def test_sweep_ab_with_and_without_cache(self):
+        spec = HammerSpec(n_procs=2, n_steps=1, n_params=2, n_levels=2,
+                          io="batched", read_mult=4)
+        raw = sweep(spec, backends=("posix",), lanes_sweep=(1,))
+        cached = sweep(spec, backends=("posix",), lanes_sweep=(1,),
+                       cache_bytes=1 << 26)
+        assert all("hit_rate" not in row for row in raw)
+        for row in cached:
+            assert row["hit_rate"] == pytest.approx(0.75)
+            assert row["bytes_served_per_backend_byte"] == pytest.approx(4.0)
+            assert row["backend_bytes_saved"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: spans
+# ---------------------------------------------------------------------------
+
+class TestCacheSpans:
+    def test_hit_miss_coalesced_spans_emitted(self, tmp_path):
+        from repro.obs import Tracer, install_tracer
+
+        fdb = CacheFDB(make_fdb("posix", schema=NWP_SCHEMA_POSIX,
+                                root=str(tmp_path / "f")), owns_inner=True)
+        tr = Tracer(proc="cache-test")
+        install_tracer(fdb, tr)
+        k = example_key()
+        fdb.archive(k, b"span-bytes")
+        fdb.flush()
+        fdb.read(k)  # miss
+        fdb.read(k)  # hit
+        names = [s.name for s in tr.drain()]
+        assert "cache.retrieve_batch" in names
+        assert "cache.miss" in names
+        assert "cache.hit" in names
+        fdb.close()
