@@ -67,6 +67,20 @@ what moves the read-side knee right:
     PYTHONPATH=src python benchmarks/fdb_hammer.py --read-mult 8 --cache
     PYTHONPATH=src python benchmarks/fdb_hammer.py --scaling --read-mult 8 --cache
 
+Churn-interference mode (``--churn``): the data-lifecycle experiment —
+each cell builds a two-tier SelectFDB (hot tier takes every archive by
+rule, cold is the default) with the :class:`~repro.lifecycle.LifecycleFDB`
+migration engine above it, demoting every output step but the newest.
+After the archive phase the foreground processes re-read everything while
+the migrator runs as one more discrete-event participant on the SAME
+contention model — migration traffic competes with foreground reads for
+the modelled hardware, and the ``"<backend>+churn"`` cells merged into
+``BENCH_contention.json`` report foreground bandwidth with/without
+migration, their ratio (the interference), fields migrated, and the
+correctness audit (zero failed reads, zero duplicate listings):
+
+    PYTHONPATH=src python benchmarks/fdb_hammer.py --churn --procs 8
+
 Remote mode (``--remote``): the MEASURED counterpart of ``--scaling`` —
 serve each backend behind an in-process asyncio
 :class:`~repro.core.remote.FDBServer` and hammer it with REAL client
@@ -95,6 +109,7 @@ from repro.core import (
     NWP_SCHEMA_DAOS,
     NWP_SCHEMA_POSIX,
     Request,
+    SelectFDB,
     build_fdb,
     make_fdb,
     make_router,
@@ -103,6 +118,7 @@ from repro.core import (
 from repro.cache import CacheFDB
 from repro.core.daos import DaosEngine
 from repro.core.posix import PosixStats
+from repro.lifecycle import LifecycleFDB
 from repro.metrics import make_contention
 
 __all__ = [
@@ -110,9 +126,12 @@ __all__ = [
     "run_hammer",
     "run_request",
     "make_backend",
+    "make_churn_tree",
     "run_hammer_contended",
+    "run_hammer_churn",
     "run_hammer_remote",
     "scaling_sweep",
+    "churn_sweep",
     "remote_sweep",
     "TIERED_CONFIG",
     "TIERED_CODEC_CONFIG",
@@ -827,6 +846,214 @@ def scaling_sweep(
 
 
 # ---------------------------------------------------------------------------
+# Churn mode (--churn): lifecycle migration vs foreground traffic
+# ---------------------------------------------------------------------------
+
+def make_churn_tree(backend: str, root: str, model, spec: HammerSpec,
+                    *, batch_size: int = 32):
+    """The churn cell's FDB under test: a two-tier SelectFDB of the same
+    backend family (the ``hot`` tier takes every archive by rule, ``cold``
+    is the default) with a :class:`~repro.lifecycle.LifecycleFDB` above it
+    demoting every output step but the newest.  BOTH tiers charge the SAME
+    contention *model*, so migration I/O competes with the foreground
+    hammer for the modelled hardware — that competition is the measurement.
+
+    Returns ``(lifecycle_fdb, clk)``; *clk* is the mutable engine clock the
+    churn loop advances to the migrator's virtual time (it stays 0 through
+    the archive phase, so every field is immediately demotion-due once the
+    migrator starts)."""
+    import os
+
+    if backend == "daos":
+        # two engines = two namespaces (tiers must not share catalogues),
+        # ONE model = one set of modelled NVM/fabric resources
+        hot = make_fdb("daos", schema=NWP_SCHEMA_DAOS,
+                       engine=DaosEngine(contention=model))
+        cold = make_fdb("daos", schema=NWP_SCHEMA_DAOS,
+                        engine=DaosEngine(contention=model))
+    else:
+        hot = make_fdb("posix", schema=NWP_SCHEMA_POSIX,
+                       root=os.path.join(root, "hot"),
+                       stats=PosixStats(name="churn-hot"), contention=model)
+        cold = make_fdb("posix", schema=NWP_SCHEMA_POSIX,
+                        root=os.path.join(root, "cold"),
+                        stats=PosixStats(name="churn-cold"), contention=model)
+    select = SelectFDB([("class=rd", hot, "hot")], default=cold)
+    clk = [0.0]
+    last_demoted = max(0, spec.n_steps - 2)
+    lf = LifecycleFDB(
+        select,
+        [{"from": "hot", "to": "default", "max_age_s": 0.0,
+          "match": f"step=0/to/{last_demoted}"}],
+        clock=lambda: clk[0],
+        batch_size=batch_size,
+    )
+    return lf, clk
+
+
+def _churn_read_quanta(handle, spec: HammerSpec, member: int, counters: dict):
+    """Foreground read stream for the churn phase: like the contended
+    retrieve path, but read failures are COUNTED (the audit the cell
+    publishes), not asserted — a failed read mid-migration is the bug the
+    benchmark exists to rule out, so it must reach the report."""
+    for step in range(spec.n_steps):
+        keys = _step_keys(spec, member, step)
+        for _rep in range(max(1, spec.read_mult)):
+            datas = handle.read_batch(keys)
+            for d in datas:
+                if d is None or len(d) != spec.field_size:
+                    counters["failed_reads"] += 1
+            yield
+
+
+def _migrator_quanta(lf: LifecycleFDB, clk: list, client, counters: dict):
+    """The migration engine as one more discrete-event participant: each
+    copy/flip/remove batch is a quantum charged to the migrator's own
+    emulated client, and the engine re-scans until a pass moves nothing."""
+    while True:
+        clk[0] = client.t
+        moved = 0
+        for report in lf.migrate_steps():
+            counters["fields_migrated"] += report.migrated
+            counters["migration_batches"] += report.batches
+            moved += report.migrated
+            clk[0] = client.t
+            yield
+        if not moved:
+            return
+        yield
+
+
+def run_hammer_churn(lf: LifecycleFDB, clk: list, spec: HammerSpec, model,
+                     *, migrate: bool) -> dict:
+    """The churn read phase: ``spec.n_procs`` foreground readers re-read
+    every archived field under the contention model; with ``migrate`` the
+    lifecycle engine joins the same deterministic schedule as an extra
+    participant.  Bandwidths count FOREGROUND clients only — migration is
+    overhead, and its cost shows up as their slowdown."""
+    import heapq
+
+    clients = [model.new_client(f"proc{m}") for m in range(spec.n_procs)]
+    counters = {"failed_reads": 0, "fields_migrated": 0, "migration_batches": 0}
+    gens = [_churn_read_quanta(lf, spec, m, counters) for m in range(spec.n_procs)]
+    if migrate:
+        mig = model.new_client("migrator")
+        gens.append(_migrator_quanta(lf, clk, mig, counters))
+        clients.append(mig)
+    heap: list[tuple[float, int]] = [(0.0, i) for i in range(len(gens))]
+    heapq.heapify(heap)
+    since_prune = 0
+    while heap:
+        _, i = heapq.heappop(heap)
+        with model.bind(clients[i]):
+            try:
+                next(gens[i])
+            except StopIteration:
+                continue
+        heapq.heappush(heap, (clients[i].t, i))
+        since_prune += 1
+        if since_prune >= 256:
+            since_prune = 0
+            model.prune(heap[0][0])
+    fg = clients[: spec.n_procs]
+    span = max(c.t for c in fg)
+    mult = max(1, spec.read_mult)
+    bytes_per_proc = spec.fields_per_proc * spec.field_size * mult
+    per_proc = [bytes_per_proc / c.t / GiB for c in fg]
+    return {
+        "mode": "retrieve",
+        "migrate": migrate,
+        "n_procs": spec.n_procs,
+        "span_s": span,
+        "agg_GiBps": spec.total_bytes * mult / span / GiB,
+        "per_proc_GiBps_mean": sum(per_proc) / len(per_proc),
+        **counters,
+    }
+
+
+def churn_sweep(
+    spec: HammerSpec,
+    backends=("posix", "daos"),
+    procs_list=(1, 2, 4, 8),
+    *,
+    virtual: bool = True,
+    out: str | None = "BENCH_contention.json",
+    batch_size: int = 32,
+) -> dict:
+    """The churn-interference experiment: per backend and client count, two
+    runs on identical fresh trees — the baseline re-reads every field with
+    the migration engine idle, the churn run does the same while the engine
+    demotes all but the newest output step.  The ``"<backend>+churn"``
+    cells MERGE into *out* next to the other sweeps and report foreground
+    read bandwidth for both runs, their ratio (the interference), fields
+    migrated, and the correctness audit: zero failed reads, zero duplicate
+    listing entries (exactly one visible catalogue copy per field)."""
+    import os
+    import tempfile
+
+    results: dict = {}
+    if out and os.path.exists(out):
+        with open(out) as f:
+            results = json.load(f)
+    results.setdefault("backends", {})
+    results["churn_procs_list"] = list(procs_list)
+
+    for backend in backends:
+        label = f"{backend}+churn"
+        rows = []
+        for n in procs_list:
+            cell = replace(spec, n_procs=n, io="batched")
+            runs: dict[bool, dict] = {}
+            for migrate in (False, True):
+                model = make_contention(backend, virtual=virtual)
+                with tempfile.TemporaryDirectory() as td:
+                    lf, clk = make_churn_tree(backend, td, model, cell,
+                                              batch_size=batch_size)
+                    try:
+                        run_hammer_contended(lf, cell, "archive", model)
+                        for s in lf.io_stats():
+                            s.reset()
+                        # new epoch for the read phase (see scaling_sweep)
+                        model.prune(float("inf"))
+                        r = run_hammer_churn(lf, clk, cell, model, migrate=migrate)
+                        # correctness audit: the merged listing must show
+                        # every field exactly once, whichever tier owns it
+                        seen = [tuple(sorted(e.key.items())) for e in lf.list({})]
+                        r["listed_fields"] = len(seen)
+                        r["duplicate_reads"] = len(seen) - len(set(seen))
+                        if migrate:
+                            r["overlay"] = lf.select.overlay_snapshot()
+                    finally:
+                        lf.close()
+                runs[migrate] = r
+            base, churn = runs[False], runs[True]
+            rows.append({
+                "n_procs": n,
+                "read_GiBps_base": base["agg_GiBps"],
+                "read_GiBps_churn": churn["agg_GiBps"],
+                "interference_ratio": (
+                    base["agg_GiBps"] / churn["agg_GiBps"]
+                    if churn["agg_GiBps"] else float("inf")
+                ),
+                "fields_migrated": churn["fields_migrated"],
+                "migration_batches": churn["migration_batches"],
+                "failed_reads": base["failed_reads"] + churn["failed_reads"],
+                "duplicate_reads": base["duplicate_reads"] + churn["duplicate_reads"],
+                "base": base,
+                "churn": churn,
+            })
+        results["backends"][label] = {
+            "sweep": rows,
+            "read_mult": spec.read_mult,
+            "migration": True,
+        }
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+    return results
+
+
+# ---------------------------------------------------------------------------
 # Remote mode (--remote): real client processes against the asyncio server
 # ---------------------------------------------------------------------------
 
@@ -977,6 +1204,14 @@ def main() -> None:
     ap.add_argument("--scaling", action="store_true",
                     help="contended client-scaling sweep (1..procs, powers of two) "
                          "through the contention model on a virtual clock")
+    ap.add_argument("--churn", action="store_true",
+                    help="churn-interference sweep: per backend/client count, "
+                         "re-read every field with the data-lifecycle engine "
+                         "idle (baseline) and again while it demotes all but "
+                         "the newest step between the tiers of a two-tier "
+                         "select — '<backend>+churn' cells (foreground "
+                         "bandwidth with/without migration, interference "
+                         "ratio, audit counters) merge into the --out JSON")
     ap.add_argument("--remote", action="store_true",
                     help="MEASURED client-scaling sweep: serve each backend "
                          "behind the asyncio FDB server and hammer it with real "
@@ -1077,6 +1312,24 @@ def main() -> None:
                     fdb.close()
             print(f"{backend:8s} {res['matched_fields']:8d} {res['present_fields']:8d} "
                   f"{res['bytes'] / (1 << 20):8.2f} {1e3 * res['seconds']:8.1f}")
+        return
+
+    if args.churn:
+        procs_list = _pow2_upto(args.procs)
+        print(f"fdb-hammer churn sweep (virtual clock): n_procs in {procs_list}, "
+              f"{spec.fields_per_proc} fields x {spec.field_size} B per proc\n")
+        results = churn_sweep(spec, backends=tuple(args.backends),
+                              procs_list=procs_list, out=args.out)
+        print(f"{'backend':14s} {'procs':>5s} {'base GiB/s':>11s} {'churn GiB/s':>12s} "
+              f"{'interference':>12s} {'migrated':>9s} {'failed':>7s} {'dups':>5s}")
+        for backend in args.backends:
+            data = results["backends"][f"{backend}+churn"]
+            for row in data["sweep"]:
+                print(f"{backend + '+churn':14s} {row['n_procs']:5d} "
+                      f"{row['read_GiBps_base']:11.3f} {row['read_GiBps_churn']:12.3f} "
+                      f"{row['interference_ratio']:12.3f} {row['fields_migrated']:9d} "
+                      f"{row['failed_reads']:7d} {row['duplicate_reads']:5d}")
+        print(f"\nmerged churn cells into {args.out}")
         return
 
     if args.remote:

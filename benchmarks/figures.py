@@ -7,6 +7,10 @@ fig5  — profiling breakdown of fdb-hammer/DAOS writer+reader time by DAOS
         API call (REAL backend, engine op_time stats)          [paper Fig. 5]
 fig6  — long scaling (10 000 fields/proc), ±contention         [paper Fig. 6]
 listing — fdb-hammer list() POSIX vs DAOS (REAL backends)      [paper §5.3]
+churn — foreground read bandwidth vs client count with and without online
+        tier migration (REAL backends under the contention model): the
+        data-lifecycle engine demotes aged steps hot→cold while the
+        foreground re-reads everything — the gap is the interference
 
 Simulated figures are produced by the calibrated bottleneck model
 (repro.simulation) and are labelled `sim`; fig5/listing run the real code.
@@ -179,5 +183,36 @@ def hammer_bandwidths() -> list[dict]:
     f, w = _writer("hammer_real_backends", ["backend", "mode", "GiBps", "us_per_field"])
     for r in rows:
         w.writerow([r["backend"], r["mode"], f"{r['bandwidth_GiBps']:.3f}", f"{r['us_per_field']:.1f}"])
+    f.close()
+    return rows
+
+
+def churn_interference() -> list[dict]:
+    """Foreground read bandwidth vs client count, with and without online
+    tier migration (the churn panel): per backend and n_procs, the baseline
+    re-reads every archived field with the lifecycle engine idle, the churn
+    run does the same while the engine demotes all but the newest output
+    step between the tiers of a two-tier select on a shared contention
+    model.  The audit columns must be zero — migration may slow readers
+    down (the interference ratio), never break them."""
+    from .fdb_hammer import churn_sweep
+
+    spec = HammerSpec(n_steps=3, n_params=3, n_levels=2, field_size=1 << 16)
+    results = churn_sweep(spec, backends=("posix", "daos"),
+                          procs_list=(1, 2, 4, 8), out=None)
+    rows = []
+    f, w = _writer("churn_interference",
+                   ["backend", "n_procs", "base_GiBps", "churn_GiBps",
+                    "interference_ratio", "fields_migrated", "failed_reads",
+                    "duplicate_reads"])
+    for backend in ("posix", "daos"):
+        for row in results["backends"][f"{backend}+churn"]["sweep"]:
+            rows.append({"backend": backend, **row})
+            w.writerow([
+                backend, row["n_procs"], f"{row['read_GiBps_base']:.3f}",
+                f"{row['read_GiBps_churn']:.3f}",
+                f"{row['interference_ratio']:.3f}", row["fields_migrated"],
+                row["failed_reads"], row["duplicate_reads"],
+            ])
     f.close()
     return rows

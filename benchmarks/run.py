@@ -54,6 +54,15 @@ def bench_paper_figures() -> None:
     parts = [f"{r['backend']}/{r['mode']}={r['bandwidth_GiBps']:.2f}GiBps" for r in hb]
     _line("fdb_hammer(real-backends)", 1e6 * (time.perf_counter() - t0), " ".join(parts))
 
+    t0 = time.perf_counter()
+    ch = figures.churn_interference()
+    worst = max(ch, key=lambda r: r["interference_ratio"])
+    bad = sum(r["failed_reads"] + r["duplicate_reads"] for r in ch)
+    _line("churn_interference(real-backends)", 1e6 * (time.perf_counter() - t0),
+          f"worst={worst['backend']}/n{worst['n_procs']}:"
+          f"{worst['interference_ratio']:.2f}x migrated={worst['fields_migrated']} "
+          f"audit_failures={bad}")
+
 
 def bench_kernels() -> None:
     import jax

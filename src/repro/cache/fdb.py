@@ -72,8 +72,12 @@ class CacheFDB(FDBClient):
     Parameters: ``max_bytes`` total budget, ``ttl_s`` default entry TTL
     (None = no expiry), ``dataset_ttl`` per-dataset overrides as
     ``[{"match": <MARS request>, "ttl_s": <s>}, ...]`` (first match wins),
-    ``shards``/``replicas`` the consistent-hash layout, ``clock`` the TTL
-    clock (injectable for tests), ``contention`` an optional
+    ``shards``/``replicas`` the consistent-hash layout, ``negative_ttl``
+    the absence-memo TTL (None = absent fields are never cached — every
+    miss for a not-yet-archived field pays a full backend round; set it
+    short, e.g. the dissemination poll interval, for workloads that probe
+    ahead of the forecast), ``clock`` the TTL clock (injectable for
+    tests), ``contention`` an optional
     :class:`~repro.metrics.contention.ContentionModel` charged at memory
     speed per cache-served byte."""
 
@@ -86,6 +90,7 @@ class CacheFDB(FDBClient):
         dataset_ttl: Sequence[Mapping] = (),
         shards: int = 8,
         replicas: int = 32,
+        negative_ttl: float | None = None,
         owns_inner: bool = True,
         clock: Callable[[], float] = time.monotonic,
         contention=None,
@@ -112,9 +117,37 @@ class CacheFDB(FDBClient):
         # keys archived through this facade but possibly not yet published
         # by the inner tree (AsyncFDB queue, remote coalescing window)
         self._dirty: set[Key] = set()
-        self._mu = threading.Lock()  # guards _dirty, _req_cache, _req_gen
+        self._mu = threading.Lock()  # guards _dirty, _req_cache, _req_gen, _neg
+        # negative cache: token -> expiry on the cache clock.  Entries are
+        # generation-guarded on store and dropped by every write/move/wipe
+        # of the key, so "absent" is never served past the publication that
+        # made it wrong (within one process; cross-process it is a TTL).
+        self._neg_ttl = None if negative_ttl is None else float(negative_ttl)
+        self._neg: dict[str, float] = {}
         self.cache_stats = IOStats("cache")
         self._contention = contention
+        # a lifecycle engine below migrates fields between tiers without an
+        # archive flowing through this facade: hook its flip so moved keys
+        # are invalidated (the bytes are identical, but codec'd tiers may
+        # differ, and the negative cache must forget promoted keys)
+        from ..lifecycle.engine import LifecycleFDB
+
+        stack, seen = [inner], set()
+        while stack:
+            node = stack.pop()
+            if id(node) in seen:
+                continue
+            seen.add(id(node))
+            if isinstance(node, LifecycleFDB):
+                node.add_move_listener(self._note_moved)
+            for attr in ("inner", "fdb"):
+                sub = getattr(node, attr, None)
+                if isinstance(sub, FDBClient):
+                    stack.append(sub)
+            for attr in ("tiers", "lanes"):
+                subs = getattr(node, attr, None)
+                if subs:
+                    stack.extend(s for s in subs if isinstance(s, FDBClient))
 
     # ----------------------------------------------------------- key tokens
     @staticmethod
@@ -156,6 +189,21 @@ class CacheFDB(FDBClient):
             self._dirty.update(keys)
             self._req_gen += 1
             self._req_cache.clear()
+            for k in keys:
+                self._neg.pop(self._token(k), None)
+        for k in keys:
+            self._cache.invalidate(self._token(k))
+
+    def _note_moved(self, keys: Sequence[Key]) -> None:
+        """Migration-path invalidation (lifecycle flip listener): drop the
+        moved keys' cached entries, memos and negative entries.  Unlike
+        :meth:`_note_write` this does NOT mark keys dirty — the destination
+        copy is already flushed and published when the flip happens."""
+        with self._mu:
+            self._req_gen += 1
+            self._req_cache.clear()
+            for k in keys:
+                self._neg.pop(self._token(k), None)
         for k in keys:
             self._cache.invalidate(self._token(k))
 
@@ -206,7 +254,7 @@ class CacheFDB(FDBClient):
             resolved: dict[str, bytes | None] = {}
             leaders: list[tuple[str, Key, object, int]] = []
             waits: list[tuple[str, object]] = []
-            hits = served_b = 0
+            hits = served_b = neg_hits = 0
             for tok, k in order:
                 data, status = self._cache.get(tok)
                 if status == "hit":
@@ -219,6 +267,22 @@ class CacheFDB(FDBClient):
                     if self._contention is not None:
                         self._contention.cache_hit(len(data))
                     continue
+                if self._neg_ttl is not None:
+                    with self._mu:
+                        exp = self._neg.get(tok)
+                        if exp is not None and self._cache.clock() >= exp:
+                            del self._neg[tok]
+                            exp = None
+                    if exp is not None:
+                        # memoised absence: no backend round, no flight
+                        neg_hits += 1
+                        resolved[tok] = None
+                        if tr.enabled:
+                            with tr.span("cache.neg_hit"):
+                                pass
+                        if self._contention is not None:
+                            self._contention.cache_hit(0)
+                        continue
                 flight, is_leader = self._flight.join(tok)
                 if is_leader:
                     # snapshot the shard generation BEFORE the fetch: a
@@ -245,7 +309,7 @@ class CacheFDB(FDBClient):
             self._account(
                 hits=hits, misses=len(leaders), coalesced=len(waits),
                 served_b=served_b, backend_b=backend_b,
-                evicts=evicts, evict_b=evict_b,
+                evicts=evicts, evict_b=evict_b, neg_hits=neg_hits,
             )
             if tr.enabled:
                 sp.set("n_keys", len(keys))
@@ -286,7 +350,16 @@ class CacheFDB(FDBClient):
         try:
             for (tok, k, flight, gen), h in zip(leaders, handles):
                 if h is None:
-                    data = None  # absent fields are NOT negative-cached
+                    data = None
+                    if self._neg_ttl is not None:
+                        # memoise the absence, generation-guarded like a
+                        # fill: an archive that raced this fetch bumped the
+                        # generation (and purged the token from _neg), so a
+                        # stale "absent" is never stored over fresh bytes
+                        if self._cache.generation(tok) == gen:
+                            with self._mu:
+                                self._neg[tok] = self._cache.clock() + self._neg_ttl
+                            self.cache_stats.record("cache_neg_store")
                 else:
                     try:
                         data = h.read()
@@ -384,15 +457,21 @@ class CacheFDB(FDBClient):
         with self._mu:
             self._req_gen += 1
             self._req_cache.clear()
+            # negative entries are keyed by full token (cheap to clear,
+            # expensive to filter by dataset): drop them all — re-probing an
+            # absent field once per wipe is the conservative trade
+            self._neg.clear()
         return report
 
     # ------------------------------------------------------------ telemetry
     def _account(self, *, hits, misses, coalesced, served_b, backend_b,
-                 evicts, evict_b) -> None:
+                 evicts, evict_b, neg_hits=0) -> None:
         st = self.cache_stats
         with st.lock:
             if hits:
                 st.ops["cache_hit"] += hits
+            if neg_hits:
+                st.ops["cache_neg_hit"] += neg_hits
             if misses:
                 st.ops["cache_miss"] += misses
             if coalesced:
@@ -425,12 +504,17 @@ class CacheFDB(FDBClient):
         served = counters.get("cache_bytes_served", 0)
         backend = counters.get("cache_bytes_backend", 0)
         lookups = hits + misses + coalesced
+        with self._mu:
+            neg_entries = len(self._neg)
         return {
             "hits": hits,
             "misses": misses,
             "coalesced": coalesced,
             "evictions": ops.get("cache_evict", 0),
             "hit_rate": (hits + coalesced) / lookups if lookups else 0.0,
+            "neg_hits": ops.get("cache_neg_hit", 0),
+            "neg_stores": ops.get("cache_neg_store", 0),
+            "neg_entries": neg_entries,
             "bytes_served": served,
             "bytes_backend": backend,
             "bytes_served_per_backend_byte": (
@@ -447,6 +531,7 @@ class CacheFDB(FDBClient):
         with self._mu:
             self._req_gen += 1
             self._req_cache.clear()
+            self._neg.clear()
         return self._cache.clear()
 
     def close(self) -> None:
@@ -457,6 +542,7 @@ class CacheFDB(FDBClient):
         with self._mu:
             self._dirty.clear()
             self._req_cache.clear()
+            self._neg.clear()
         self._cache.clear()
 
     def __repr__(self) -> str:

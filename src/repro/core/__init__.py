@@ -42,7 +42,7 @@ from .config import (
     register_schema,
     registered_backends,
 )
-from .datahandle import DataHandle, MemoryDataHandle
+from .datahandle import DataHandle, FieldGoneError, MemoryDataHandle
 from .fdb import FDB, make_fdb
 from .fieldset import ConcatenatedDataHandle, FieldResolutionError, FieldSet
 from .keys import Key, key_union
@@ -90,6 +90,7 @@ __all__ = [
     "WipeReport",
     "FieldSet",
     "FieldResolutionError",
+    "FieldGoneError",
     "ConcatenatedDataHandle",
     "CODEC_HEADER_SIZE",
     "CodecError",

@@ -67,6 +67,14 @@ class Catalogue(abc.ABC):
     def list(self, request: Mapping[str, Iterable[str] | str]) -> Iterator[ListEntry]:
         """All (identifier, location) pairs matching a partial request."""
 
+    def remove_batch(self, triples: Sequence[IndexTriple]) -> list["FieldLocation | None"]:
+        """Remove individual index entries (the lifecycle migrator's wipe
+        step — field-granular, unlike dataset-granular :meth:`wipe`).
+        Returns each entry's prior location (None if it was absent) so the
+        Store can reclaim the bytes.  Optional: backends without per-field
+        removal raise."""
+        raise NotImplementedError(f"{type(self).__name__} has no per-field removal")
+
     @abc.abstractmethod
     def wipe(self, dataset_key: Key) -> None:
         """Efficiently remove an entire dataset (rolling-archive use)."""

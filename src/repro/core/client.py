@@ -30,7 +30,7 @@ from typing import Iterable, Iterator, Mapping, Sequence
 
 from ..obs.tracer import NULL_TRACER, install_tracer
 from .catalogue import ListEntry
-from .datahandle import DataHandle
+from .datahandle import DataHandle, FieldGoneError
 from .fieldset import FieldSet
 from .keys import Key
 from .request import Request, as_request
@@ -124,6 +124,20 @@ class FDBClient(abc.ABC):
     def io_stats(self) -> list:
         """The distinct IOStats sinks behind this client."""
 
+    def _remove_fields(self, keys: Sequence["Key | Mapping[str, str]"]) -> int:
+        """Field-granular removal — the lifecycle migrator's wipe step,
+        applied to exactly the fields it just copied (unlike the
+        dataset-granular public ``wipe``).  Returns how many fields were
+        actually removed.  Wrapper facades forward to the client they
+        decorate; terminal facades without per-field removal raise."""
+        for attr in ("inner", "fdb"):
+            sub = getattr(self, attr, None)
+            if isinstance(sub, FDBClient):
+                return sub._remove_fields(keys)
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support per-field removal"
+        )
+
     # ------------------------------------------------------------- derived IO
     def _as_key(self, key: Key | Mapping[str, str]) -> Key:
         return key if isinstance(key, Key) else Key(key)
@@ -139,27 +153,40 @@ class FDBClient(abc.ABC):
     def retrieve(self, key: Key | Mapping[str, str]) -> DataHandle | None:
         return self.retrieve_batch([key])[0]
 
+    def _read_handle(self, key: Key | Mapping[str, str], h: DataHandle) -> bytes | None:
+        """Drain one handle; on a wipe/migration race (the bytes vanished
+        after the catalogue resolved — :class:`FieldGoneError`) re-resolve
+        once: a migrated field reads from its new tier, a wiped one is
+        ``None``.  Either way the caller sees a full field or None, never a
+        torn handle."""
+        try:
+            try:
+                return h.read()
+            finally:
+                h.close()
+        except FieldGoneError:
+            h = self.retrieve(key)
+            if h is None:
+                return None
+            try:
+                return h.read()
+            except FieldGoneError:
+                return None
+            finally:
+                h.close()
+
     def read(self, key: Key | Mapping[str, str]) -> bytes | None:
         h = self.retrieve(key)
         if h is None:
             return None
-        try:
-            return h.read()
-        finally:
-            h.close()
+        return self._read_handle(key, h)
 
     def read_batch(
         self, keys: Sequence[Key | Mapping[str, str]]
     ) -> list[bytes | None]:
         out: list[bytes | None] = []
-        for h in self.retrieve_batch(keys):
-            if h is None:
-                out.append(None)
-            else:
-                try:
-                    out.append(h.read())
-                finally:
-                    h.close()
+        for key, h in zip(keys, self.retrieve_batch(keys)):
+            out.append(None if h is None else self._read_handle(key, h))
         return out
 
     def drain(self) -> None:

@@ -16,9 +16,11 @@ composition of the four facades, nested arbitrarily:
     ``"type"`` may be omitted when ``"backend"`` is present.
 
 ``{"type": "select", "rules": [{"match": "class=od,stream=oper",
-"fdb": {...}}, ...], "default": {...}}``
+"fdb": {...}, "name": "hot"}, ...], "default": {...}}``
     a :class:`~repro.core.select.SelectFDB` routing every operation by
     first-matching metadata rule — the paper's tiered hot/cold deployment.
+    The optional ``name`` labels the tier; lifecycle policies reference
+    tiers by these labels (unnamed tiers get ``tierN``/``default``).
 
 ``{"type": "dist", "lanes": [{...}, ...]}`` — or
 ``{"type": "dist", "template": {...}, "n_lanes": N}``
@@ -45,6 +47,16 @@ composition of the four facades, nested arbitrarily:
     N concurrent identical retrieves cost one inner round — and write-path
     invalidation on ``archive``/``archive_fields``/``wipe``.  Composes
     above select/codec/async/remote unchanged.
+
+``{"type": "lifecycle", "policies": [{"from": "hot", "to": "cold",
+"max_age_s": 30, "match": "step=0/to/5"}, ...], "inner": {...}}``
+    a :class:`~repro.lifecycle.LifecycleFDB` data-lifecycle engine over the
+    SelectFDB found in the inner tree: declarative demotion (age / ``step``
+    fragment / access count) and promotion-on-access policies drive online
+    batched tier migration through a pin/copy/flip/remove protocol on the
+    select placement overlay, so concurrent readers always hit exactly one
+    copy.  Optional ``batch_size``.  Composes under cache (moved keys are
+    invalidated) and above async/codec/remote tiers unchanged.
 
 Any node may additionally carry ``"trace": true`` (or a mapping with
 ``capacity`` / ``slow_op_s`` / ``slow_capacity``): a
@@ -315,7 +327,7 @@ register_backend(
 # Validation + JSON round-trip
 # ---------------------------------------------------------------------------
 
-_TYPES = ("local", "select", "dist", "async", "codec", "remote", "cache")
+_TYPES = ("local", "select", "dist", "async", "codec", "remote", "cache", "lifecycle")
 
 
 def _config_type(cfg: Mapping) -> str:
@@ -374,6 +386,9 @@ def validate_config(config: Mapping) -> None:
         for rule in rules:
             if not isinstance(rule, Mapping) or "match" not in rule or "fdb" not in rule:
                 raise ConfigError("each select rule needs 'match' and 'fdb'")
+            name = rule.get("name")
+            if name is not None and not isinstance(name, str):
+                raise ConfigError(f"select rule 'name' must be a string, got {name!r}")
             validate_config(rule["fdb"])
         if not rules and config.get("default") is None:
             raise ConfigError("select config needs 'rules' and/or 'default'")
@@ -419,12 +434,32 @@ def validate_config(config: Mapping) -> None:
         ttl = config.get("ttl_s")
         if ttl is not None and (not isinstance(ttl, (int, float)) or isinstance(ttl, bool) or ttl < 0):
             raise ConfigError(f"cache ttl_s must be a non-negative number, got {ttl!r}")
+        neg = config.get("negative_ttl")
+        if neg is not None and (not isinstance(neg, (int, float)) or isinstance(neg, bool) or neg < 0):
+            raise ConfigError(f"cache negative_ttl must be a non-negative number, got {neg!r}")
         rules = config.get("dataset_ttl", ())
         if not isinstance(rules, (list, tuple)):
             raise ConfigError("cache 'dataset_ttl' must be a list")
         for rule in rules:
             if not isinstance(rule, Mapping) or "match" not in rule or "ttl_s" not in rule:
                 raise ConfigError("each cache dataset_ttl rule needs 'match' and 'ttl_s'")
+        validate_config(config["inner"])
+    elif t == "lifecycle":
+        if config.get("inner") is None:
+            raise ConfigError("lifecycle config requires 'inner'")
+        policies = config.get("policies")
+        if not isinstance(policies, (list, tuple)) or not policies:
+            raise ConfigError("lifecycle config needs a non-empty 'policies' list")
+        from ..lifecycle.policy import LifecyclePolicy
+
+        for p in policies:
+            try:
+                LifecyclePolicy.from_dict(p)
+            except ValueError as e:
+                raise ConfigError(str(e)) from None
+        bs = config.get("batch_size")
+        if bs is not None and (not isinstance(bs, int) or isinstance(bs, bool) or bs < 1):
+            raise ConfigError(f"lifecycle batch_size must be a positive int, got {bs!r}")
         validate_config(config["inner"])
     elif t == "remote":
         addr, inner = config.get("addr"), config.get("inner")
@@ -579,6 +614,8 @@ def build_fdb(config: Mapping) -> FDBClient:
         return _build_remote(config)
     if t == "cache":
         return _build_cache(config)
+    if t == "lifecycle":
+        return _build_lifecycle(config)
     return _build_async(config)
 
 
@@ -638,7 +675,7 @@ def _build_select(cfg: Mapping) -> FDBClient:
     try:
         default = clients[-1] if default_cfg is not None else None
         return SelectFDB(
-            [(rule["match"], c) for rule, c in zip(rule_cfgs, clients)],
+            [(rule["match"], c, rule.get("name")) for rule, c in zip(rule_cfgs, clients)],
             default=default,
             shared=[c for sub, c in zip(sub_cfgs, clients)
                     if isinstance(sub, FDBClient)],
@@ -705,13 +742,28 @@ def _build_cache(cfg: Mapping) -> FDBClient:
     try:
         kw = {
             k: cfg[k]
-            for k in ("max_bytes", "ttl_s", "dataset_ttl", "shards", "replicas")
+            for k in ("max_bytes", "ttl_s", "dataset_ttl", "shards", "replicas", "negative_ttl")
             if k in cfg
         }
         # same ownership rule as async/codec: the tier owns what the config
         # built beneath it; a prebuilt pass-through inner stays caller-owned
         owns = cfg.get("owns_inner", not isinstance(inner_cfg, FDBClient))
         return CacheFDB(inner, owns_inner=owns, **kw)
+    except BaseException:
+        _close_built([inner_cfg], [inner])
+        raise
+
+
+def _build_lifecycle(cfg: Mapping) -> FDBClient:
+    from ..lifecycle import LifecycleFDB
+
+    inner_cfg = cfg["inner"]
+    inner = build_fdb(inner_cfg)
+    try:
+        kw = {k: cfg[k] for k in ("batch_size",) if k in cfg}
+        # same ownership rule as async/codec/cache
+        owns = cfg.get("owns_inner", not isinstance(inner_cfg, FDBClient))
+        return LifecycleFDB(inner, cfg["policies"], owns_inner=owns, **kw)
     except BaseException:
         _close_built([inner_cfg], [inner])
         raise

@@ -324,3 +324,15 @@ class DaosEngine:
         n = arr.get_size()
         self._account("daos_array_get_size", dkey=f"{cont}/{oid}", dt=time.perf_counter() - t0)
         return n
+
+    def obj_punch(self, pool: str, cont: str, oid: ObjectId) -> bool:
+        """``daos_obj_punch`` — drop one object (any type) and its extents.
+        Idempotent: punching a missing object is False, not an error (the
+        lifecycle migrator may race a dataset wipe)."""
+        t0 = time.perf_counter()
+        try:
+            existed = self._cont(pool, cont).destroy_object(oid)
+        except DaosError:
+            existed = False  # container already destroyed underneath us
+        self._account("daos_obj_punch", dkey=f"{cont}/{oid}", dt=time.perf_counter() - t0)
+        return existed

@@ -76,6 +76,13 @@ class Container:
                 raise TypeError(f"object {oid} is not an Array object")
             return obj
 
+    def destroy_object(self, oid: ObjectId) -> bool:
+        """``daos_obj_punch``: drop one object and its extents.  True if the
+        object existed.  Subsequent opens raise as if it never was — the
+        OID is NOT recycled (allocator state is untouched)."""
+        with self._mu:
+            return self._objects.pop(oid, None) is not None
+
     # -- admin ----------------------------------------------------------------
     def object_count(self) -> int:
         return len(self._objects)

@@ -213,6 +213,21 @@ class DaosCatalogue(Catalogue):
                     out[i] = FieldLocation.decode(raw)
         return out
 
+    def remove_batch(self, triples) -> list[FieldLocation | None]:
+        """Field-granular removal: ``kv_remove`` each element from its index
+        KV (MVCC — a concurrent reader's ``kv_get`` sees the old value or
+        None, never a torn record).  Axis KVs are deliberately left alone:
+        they are an over-approximating pruning hint, and a stale axis value
+        only costs a futile lookup, never a wrong answer."""
+        prior = self.retrieve_batch(triples)
+        for (dataset_key, collocation_key, element_key), loc in zip(triples, prior):
+            if loc is None:
+                continue
+            cont = self._dataset_container(dataset_key.stringify(), create=False)
+            index_oid = self._index_kv(cont, collocation_key.stringify(), create=False)
+            self._engine.kv_remove(self._pool, cont, index_oid, element_key.stringify())
+        return prior
+
     def list(self, request: Mapping[str, Iterable[str] | str]) -> Iterator[ListEntry]:
         ds_req, co_req, el_req = self.schema.request_levels(request)
         for ds_s in self._engine.kv_list(self._pool, self._root, ROOT_OID):

@@ -16,9 +16,10 @@ from __future__ import annotations
 
 import threading
 
-from ..datahandle import DataHandle
+from ..datahandle import DataHandle, FieldGoneError
 from ..keys import Key
 from ..store import FieldLocation, Store
+from ..daos.engine import ENOENT, DaosError
 from ..daos.objects import OC_S1, ObjectId
 
 __all__ = ["DaosStore", "OidAllocator"]
@@ -155,6 +156,15 @@ class DaosStore(Store):
             self._allocators.pop(cont, None)
         return None
 
+    def punch(self, location: FieldLocation) -> int:
+        """Field-granular reclaim: every field is its own array object, so
+        ``daos_obj_punch`` frees exactly its extents — the NVM advantage the
+        lifecycle migrator leans on (POSIX gets its space back only at
+        dataset wipe)."""
+        pool, cont, oid_s = location.uri.split("/")
+        existed = self._engine.obj_punch(pool, cont, ObjectId.parse(oid_s))
+        return location.length if existed else 0
+
 
 class _DaosArrayHandle(DataHandle):
     def __init__(self, engine, location: FieldLocation):
@@ -167,12 +177,21 @@ class _DaosArrayHandle(DataHandle):
         self._length = location.length
 
     def read(self) -> bytes:
-        return self._engine.array_read(self._pool, self._cont, self._oid, self._offset, self._length)
+        return self.read_range(0, self._length)
 
     def read_range(self, offset: int, length: int) -> bytes:
         if offset + length > self._length:
             raise ValueError("read_range beyond field extent")
-        return self._engine.array_read(self._pool, self._cont, self._oid, self._offset + offset, length)
+        try:
+            return self._engine.array_read(
+                self._pool, self._cont, self._oid, self._offset + offset, length
+            )
+        except DaosError as e:
+            if e.errno == ENOENT:
+                # container destroyed (wipe) or object punched (migration
+                # source-removal) after the catalogue resolved this handle
+                raise FieldGoneError(f"{self._pool}/{self._cont}/{self._oid}") from None
+            raise
 
     @property
     def size(self) -> int:

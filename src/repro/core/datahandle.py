@@ -4,7 +4,20 @@ from __future__ import annotations
 
 import abc
 
-__all__ = ["DataHandle", "MemoryDataHandle"]
+__all__ = ["DataHandle", "FieldGoneError", "MemoryDataHandle"]
+
+
+class FieldGoneError(LookupError):
+    """The field vanished between catalogue resolution and the byte read.
+
+    Store handles are lazy: ``retrieve`` resolves a location, the bytes are
+    only touched on ``read``.  A concurrent ``wipe`` (or a lifecycle
+    migration removing the source copy after its flip) can land in that
+    window, on either backend — the POSIX handle would hit a deleted data
+    file, the DAOS handle a destroyed container.  Handles raise THIS error
+    instead of leaking the backend exception, so ``FDBClient.read`` can
+    re-resolve once and then answer ``None`` — a torn handle never escapes
+    to the caller."""
 
 
 class DataHandle(abc.ABC):

@@ -148,6 +148,29 @@ class FDB(FDBClient):
         return self.catalogue.list(request)
 
     # ------------------------------------------------------------------- wipe
+    def _remove_fields(self, keys) -> int:
+        """Field-granular removal, index-first like the dataset wipe: the
+        catalogue entry goes (transactionally — tombstone segment on POSIX,
+        MVCC ``kv_remove`` on DAOS), THEN the store bytes are punched, so a
+        reader either resolves nothing or resolves a location whose bytes
+        may at worst vanish into the :class:`FieldGoneError` → re-resolve
+        path — never a torn read."""
+        tr = self._trace
+        splits = [self._split(k) for k in keys]
+        with tr.span("catalogue.remove") as sp:
+            prior = self.catalogue.remove_batch(
+                [(s.dataset, s.collocation, s.element) for s in splits]
+            )
+            if tr.enabled:
+                sp.set("n_keys", len(splits))
+        removed = 0
+        with tr.span("store.punch"):
+            for loc in prior:
+                if loc is not None:
+                    removed += 1
+                    self.store.punch(loc)
+        return removed
+
     def _wipe_dataset(self, dataset_key: Key, entries=None) -> WipeReport:
         """Remove one dataset everywhere: count what the index holds, drop
         the index, then drop the store objects — index-first, so no reader

@@ -40,6 +40,14 @@ __all__ = ["PosixCatalogue"]
 
 _TOC = "toc"
 
+# Tombstone record: per-field removal publishes a normal (immutable,
+# O_APPEND-TOC'd) segment whose entries carry this sentinel instead of an
+# encoded location.  Newest-segment-wins then makes the removal exactly as
+# transactional as a re-archive: readers that tailed the TOC past the
+# tombstone see the field gone, earlier readers still resolve the old copy.
+# '-' cannot prefix a real encoded location (those start with the scheme).
+_TOMBSTONE = b"-"
+
 
 class PosixCatalogue(Catalogue):
     def __init__(
@@ -112,7 +120,11 @@ class PosixCatalogue(Catalogue):
                 lat = self._cm.mds(2) if self._cm else None
                 self._stats.account("create_index_segment", mds=2, seconds=lat)
                 payload = b"".join(
-                    el.encode() + b"\t" + loc.encode() + b"\n" for el, loc in entries.items()
+                    el.encode()
+                    + b"\t"
+                    + (loc if isinstance(loc, bytes) else loc.encode())
+                    + b"\n"
+                    for el, loc in entries.items()
                 )
                 f.write(payload)
                 f.flush()
@@ -208,7 +220,7 @@ class PosixCatalogue(Catalogue):
                 continue
             raw = self._load_segment(ds_s, segname).get(el_s)
             if raw is not None:
-                return FieldLocation.decode(raw)
+                return None if raw == _TOMBSTONE else FieldLocation.decode(raw)
         return None
 
     def retrieve_batch(self, triples) -> list[FieldLocation | None]:
@@ -230,10 +242,29 @@ class PosixCatalogue(Catalogue):
                     continue
                 raw = self._load_segment(ds_s, segname).get(el_s)
                 if raw is not None:
-                    found = FieldLocation.decode(raw)
+                    if raw != _TOMBSTONE:
+                        found = FieldLocation.decode(raw)
                     break
             out.append(found)
         return out
+
+    def remove_batch(self, triples) -> list[FieldLocation | None]:
+        """Field-granular removal: resolve each entry's current location,
+        then publish tombstone records through the normal immutable-segment
+        + O_APPEND-TOC pathway — the same transactional exchange as a
+        re-archive, so a concurrent reader sees the old copy or nothing,
+        never a half-removed index."""
+        prior = self.retrieve_batch(triples)
+        pending: dict[tuple[str, str], dict[str, bytes]] = {}
+        for (ds_k, co_k, el_k), loc in zip(triples, prior):
+            if loc is None:
+                continue
+            pending.setdefault((ds_k.stringify(), co_k.stringify()), {})[
+                el_k.stringify()
+            ] = _TOMBSTONE
+        if pending:
+            self.publish_pending(pending)
+        return prior
 
     def list(self, request: Mapping[str, Iterable[str] | str]) -> Iterator[ListEntry]:
         ds_req, co_req, el_req = self.schema.request_levels(request)
@@ -263,6 +294,10 @@ class PosixCatalogue(Catalogue):
                     full_id = f"{co_s}/{el_s}"
                     if full_id in emitted:
                         continue  # superseded by a newer segment
+                    if raw == _TOMBSTONE:
+                        # removed: suppress every older copy of this element
+                        emitted.add(full_id)
+                        continue
                     element_key = self.schema.element_from_string(el_s)
                     if not element_key.matches(el_req):
                         continue

@@ -27,7 +27,7 @@ import time
 import uuid
 from typing import Sequence
 
-from ..datahandle import DataHandle
+from ..datahandle import DataHandle, FieldGoneError
 from ..keys import Key
 from ..store import FieldLocation, Store
 from .stats import POSIX_STATS, PosixStats
@@ -185,11 +185,21 @@ class _PosixFileHandle(DataHandle):
         if offset + length > self._length:
             raise ValueError("read_range beyond field extent")
         t0 = time.perf_counter()
-        with open(self._path, "rb") as f:
+        try:
+            f = open(self._path, "rb")
+        except FileNotFoundError:
+            # a concurrent wipe (or migration source-removal) deleted the
+            # data file between catalogue resolution and this read
+            raise FieldGoneError(self._path) from None
+        with f:
             lat = self._cm.mds(1) if self._cm else None
             self._stats.account("open_data_file_read", mds=1, seconds=lat)
             f.seek(self._offset + offset)
             data = f.read(length)
+        if len(data) < length:
+            # the file exists but no longer covers this extent — same race,
+            # caught mid-truncation; never hand back a torn field
+            raise FieldGoneError(self._path)
         # reading another process's streamed file: conflicting extent lock
         lat = self._cm.read(self._path, len(data)) if self._cm else time.perf_counter() - t0
         self._stats.account("read", nbytes_r=len(data), locks=1, seconds=lat, shard=self._path)

@@ -34,6 +34,7 @@ Build one declaratively with ``{"type": "select", ...}`` through
 
 from __future__ import annotations
 
+import threading
 from typing import Iterator, Mapping, Sequence
 
 from .catalogue import ListEntry
@@ -72,28 +73,47 @@ class SelectFDB(FDBClient):
         *,
         shared: Sequence[FDBClient] = (),
     ):
-        """``rules``: ordered ``(match, client)`` pairs — *match* is a
-        :class:`Request`, MARS text, or mapping; first match wins.
-        ``default``: the tier for identifiers no rule covers (optional —
-        without it, unmatched archives raise).  ``shared``: tiers this
-        facade does NOT own — flush/drain still reach them, ``close()``
-        leaves them open (config builds list prebuilt pass-through
-        subtrees here, so closing the tree never closes a caller's
-        client)."""
+        """``rules``: ordered ``(match, client)`` or ``(match, client, name)``
+        tuples — *match* is a :class:`Request`, MARS text, or mapping; first
+        match wins; *name* (optional) labels the tier for lifecycle policies
+        (``from_tier``/``to_tier``).  ``default``: the tier for identifiers
+        no rule covers (optional — without it, unmatched archives raise).
+        ``shared``: tiers this facade does NOT own — flush/drain still reach
+        them, ``close()`` leaves them open (config builds list prebuilt
+        pass-through subtrees here, so closing the tree never closes a
+        caller's client)."""
         self._shared = {id(c) for c in shared}
-        self._rules: list[tuple[Request, FDBClient]] = [
-            (as_request(match), client) for match, client in rules
-        ]
+        self._rules: list[tuple[Request, FDBClient]] = []
+        names: dict[int, str] = {}
+        for rule in rules:
+            match, client, *rest = rule
+            self._rules.append((as_request(match), client))
+            if rest and rest[0] is not None:
+                names.setdefault(id(client), str(rest[0]))
         self._default = default
         tiers: dict[int, FDBClient] = {}
         for _, client in self._rules:
             tiers.setdefault(id(client), client)
         if default is not None:
             tiers.setdefault(id(default), default)
+            names.setdefault(id(default), "default")
         if not tiers:
             raise ValueError("SelectFDB needs at least one rule or a default tier")
         #: distinct tier clients, in rule order (default last)
         self.tiers: tuple[FDBClient, ...] = tuple(tiers.values())
+        #: per-tier labels aligned with ``tiers`` (rule ``name`` or ``tierN``)
+        self.tier_names: tuple[str, ...] = tuple(
+            names.get(id(c), f"tier{i}") for i, c in enumerate(self.tiers)
+        )
+        if len(set(self.tier_names)) != len(self.tier_names):
+            raise ValueError(f"select tier names must be unique: {self.tier_names}")
+        self._tier_by_name = dict(zip(self.tier_names, self.tiers))
+        # migration placement overlay: dataset Key -> {full Key -> owning
+        # tier}.  Consulted BEFORE the static rules so a moved field resolves
+        # to its new tier without config edits; written only through
+        # place()/clear_placement() under the lock.
+        self._overlay: dict[Key, dict[Key, FDBClient]] = {}
+        self._overlay_mu = threading.Lock()
         self.schema: Schema = self.tiers[0].schema
         # tiers may split levels differently (per-backend keyword placement)
         # but must agree on WHAT the keywords are and which form a dataset —
@@ -115,13 +135,91 @@ class SelectFDB(FDBClient):
 
     # ------------------------------------------------------------------ routing
     def route(self, key: Key | Mapping[str, str]) -> FDBClient | None:
-        """The tier that owns *key*: first matching rule, else the default,
-        else None."""
+        """The tier that owns *key*: placement overlay first (a migrated
+        field lives where the migrator put it, whatever the static rules
+        say), then the first matching rule, then the default, else None."""
         key = self._as_key(key)
+        if self._overlay:
+            ds = key.subset(self.schema.dataset_keys)
+            with self._overlay_mu:
+                placed = self._overlay.get(ds)
+                if placed is not None:
+                    client = placed.get(key)
+                    if client is not None:
+                        return client
         for match, client in self._rules:
             if match.matches(key):
                 return client
         return self._default
+
+    # ---------------------------------------------------------- placement overlay
+    def resolve_tier(self, tier: FDBClient | str) -> FDBClient:
+        """Map a tier name (or a tier client, validated) to the client."""
+        if isinstance(tier, str):
+            try:
+                return self._tier_by_name[tier]
+            except KeyError:
+                raise ValueError(
+                    f"unknown select tier {tier!r}; have {self.tier_names}"
+                ) from None
+        if id(tier) not in self._tier_index:
+            raise ValueError("placement target is not a tier of this SelectFDB")
+        return tier
+
+    def place(self, key: Key | Mapping[str, str], tier: FDBClient | str) -> None:
+        """Pin *key* to *tier* in the overlay (atomic per key).  The migrator
+        uses this twice per field: first to pin the SOURCE tier while the
+        copy is in flight (so the destination's freshly-catalogued duplicate
+        stays invisible), then to flip to the destination — at no point does
+        a reader see zero or two authoritative copies."""
+        client = self.resolve_tier(tier)
+        key = self._as_key(key)
+        ds = key.subset(self.schema.dataset_keys)
+        with self._overlay_mu:
+            self._overlay.setdefault(ds, {})[key] = client
+
+    def placement(self, key: Key | Mapping[str, str]) -> FDBClient | None:
+        """The overlay entry for *key*, or None if it follows the static rules."""
+        key = self._as_key(key)
+        ds = key.subset(self.schema.dataset_keys)
+        with self._overlay_mu:
+            placed = self._overlay.get(ds)
+            return None if placed is None else placed.get(key)
+
+    def clear_placement(self, key: Key | Mapping[str, str]) -> None:
+        key = self._as_key(key)
+        ds = key.subset(self.schema.dataset_keys)
+        with self._overlay_mu:
+            placed = self._overlay.get(ds)
+            if placed is not None:
+                placed.pop(key, None)
+                if not placed:
+                    del self._overlay[ds]
+
+    def overlay_snapshot(self) -> dict:
+        """Counts per tier name — how many fields the overlay has pinned."""
+        name_of = {id(c): n for n, c in self._tier_by_name.items()}
+        out: dict[str, int] = {}
+        with self._overlay_mu:
+            for placed in self._overlay.values():
+                for client in placed.values():
+                    n = name_of.get(id(client), f"tier{self._tier_index[id(client)]}")
+                    out[n] = out.get(n, 0) + 1
+        return out
+
+    def _overlay_tiers(self, request: Request) -> list[FDBClient]:
+        """Tiers the overlay pins keys to, for datasets *request* could
+        touch — these must join any fan-out even when no static rule of
+        theirs intersects the request."""
+        if not self._overlay:
+            return []
+        out: dict[int, FDBClient] = {}
+        with self._overlay_mu:
+            for ds, placed in self._overlay.items():
+                if ds.matches({k: s for k, s in request.items() if k in ds}):
+                    for client in placed.values():
+                        out.setdefault(id(client), client)
+        return list(out.values())
 
     def _route_or_raise(self, key: Key | Mapping[str, str]) -> FDBClient:
         client = self.route(key)
@@ -145,6 +243,8 @@ class SelectFDB(FDBClient):
                 out.setdefault(id(client), client)
         if self._default is not None:
             out.setdefault(id(self._default), self._default)
+        for client in self._overlay_tiers(request):
+            out.setdefault(id(client), client)
         return list(out.values())
 
     # --------------------------------------------------------------------- write
@@ -209,9 +309,22 @@ class SelectFDB(FDBClient):
             tier.drain()
 
     # ---------------------------------------------------------------------- read
+    def _retrieve_routed(self, key: Key | Mapping[str, str], client: FDBClient) -> DataHandle | None:
+        """Retrieve from the tier ``route`` picked, re-routing once on a
+        miss: between resolving the route and the catalogue lookup a
+        migration flip may have moved the key (and removed the source
+        copy), so a miss from a now-stale tier must be retried against the
+        CURRENT owner before it counts as absent."""
+        h = client.retrieve(key)
+        if h is None:
+            now = self.route(key)
+            if now is not None and now is not client:
+                return now.retrieve(key)
+        return h
+
     def retrieve(self, key: Key | Mapping[str, str]) -> DataHandle | None:
         client = self.route(key)
-        return None if client is None else client.retrieve(key)
+        return None if client is None else self._retrieve_routed(key, client)
 
     def retrieve_batch(self, keys: Sequence[Key | Mapping[str, str]]) -> list[DataHandle | None]:
         tr = self._trace
@@ -232,15 +345,33 @@ class SelectFDB(FDBClient):
                         tsp.set("n_keys", len(idxs))
                     results = client.retrieve_batch([keys[i] for i in idxs])
                 for i, r in zip(idxs, results):
+                    if r is None:
+                        # miss from a tier that may have just lost the key
+                        # to a migration flip — re-route before answering
+                        now = self.route(keys[i])
+                        if now is not None and now is not client:
+                            r = now.retrieve(keys[i])
                     out[i] = r
             return out
 
     def _list(self, request: Request) -> Iterator[ListEntry]:
         """Merged listing across every tier the request could touch.  Tiers
         hold disjoint identifiers (each key routes to exactly one tier), so
-        concatenation IS the merge."""
+        concatenation IS the merge.  Datasets under migration are the one
+        exception: mid-copy, a field is catalogued on BOTH the source and the
+        destination tier, so for those datasets each entry is yielded only
+        from the tier ``route`` currently resolves it to — the merged listing
+        never shows duplicates or drops a key, whichever side of the flip a
+        concurrent migration is on."""
+        with self._overlay_mu:
+            ovl_datasets = set(self._overlay)
+        ds_keys = self.schema.dataset_keys
         for tier in self._matching_tiers(request):
-            yield from getattr(tier, "_list", tier.list)(request)
+            for entry in getattr(tier, "_list", tier.list)(request):
+                if ovl_datasets and entry.key.subset(ds_keys) in ovl_datasets:
+                    if self.route(entry.key) is not tier:
+                        continue
+                yield entry
 
     # ---------------------------------------------------------------------- wipe
     def _wipe_dataset(self, dataset_key: Key, entries=None) -> WipeReport:
@@ -254,6 +385,10 @@ class SelectFDB(FDBClient):
         report = WipeReport()
         for tier in self._matching_tiers(ds_req):
             report = report + tier._wipe_dataset(dataset_key, None)
+        # the dataset is gone everywhere — any migration placements for it
+        # are now dangling and must not redirect a future re-archive
+        with self._overlay_mu:
+            self._overlay.pop(self._as_key(dataset_key).subset(self.schema.dataset_keys), None)
         return report
 
     # ------------------------------------------------------------------ telemetry
@@ -271,6 +406,9 @@ class SelectFDB(FDBClient):
         """Merged telemetry plus the per-tier breakdown."""
         snap = super().stats_snapshot()
         snap["tiers"] = [tier.stats_snapshot() for tier in self.tiers]
+        overlay = self.overlay_snapshot()
+        if overlay:
+            snap["overlay"] = overlay
         return snap
 
     # ------------------------------------------------------------------ lifecycle

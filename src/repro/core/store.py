@@ -96,5 +96,15 @@ class Store(abc.ABC):
         at deleted bytes."""
         return None
 
+    def punch(self, location: "FieldLocation") -> int:
+        """Reclaim the bytes of ONE field (the lifecycle migrator's wipe
+        step).  Returns the bytes physically freed — 0 when this store
+        cannot reclaim sub-file/sub-object extents (POSIX packs many fields
+        per append-only stream; its space comes back only when the whole
+        dataset is wiped).  Called AFTER the catalogue entry is removed, so
+        the index never points at punched bytes."""
+        del location
+        return 0
+
     def close(self) -> None:  # release cached handles
         pass

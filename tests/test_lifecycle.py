@@ -1,0 +1,491 @@
+"""Data-lifecycle engine tests — online tier migration over SelectFDB.
+
+The contracts, asserted on posix, daos AND the paper's mixed hot(DAOS)/
+cold(POSIX) deployment:
+
+- **policy semantics**: age / MARS-fragment / access-count demotion and
+  promotion-on-access resolve to the right moves and nothing else;
+- **exactly-one-copy**: mid-flight (at the flip, while BOTH tiers hold a
+  raw catalogue entry) every key is visible exactly once through the
+  select layer, and after each batch the source copy is gone — readers
+  racing the migrator always get identical bytes, never None, never a
+  duplicate listing;
+- **wipe/read race**: a handle resolved before a wipe either reads the
+  full field or surfaces :class:`FieldGoneError`; the client-level read
+  re-resolves (to the new tier after a migration) or answers None;
+- **negative caching**: CacheFDB memoises absence under ``negative_ttl``,
+  invalidated by archives and expiry, counted in the cache sink;
+- **composition**: ``{"type": "lifecycle"}`` builds through config, and a
+  CacheFDB above the engine drops moved keys at the flip.
+"""
+
+import threading
+
+import pytest
+
+from repro.cache import CacheFDB
+from repro.core import (
+    FDBConfig,
+    FieldGoneError,
+    Key,
+    NWP_SCHEMA_DAOS,
+    NWP_SCHEMA_POSIX,
+    SelectFDB,
+    build_fdb,
+    make_fdb,
+)
+from repro.core.config import ConfigError
+from repro.core.daos import DaosEngine
+from repro.core.posix import PosixStats
+from repro.lifecycle import LifecycleFDB, LifecyclePolicy
+
+BACKENDS = ["posix", "daos", "mixed"]
+
+
+def ident(num="0", step="0", param="2t") -> Key:
+    return Key(
+        {"class": "od", "stream": "oper", "expver": "0001", "date": "20240603",
+         "time": "1200", "type": "ef", "levtype": "sfc", "number": num,
+         "levelist": "0", "step": step, "param": param}
+    )
+
+
+def dataset_req() -> dict:
+    return {"class": "od", "stream": "oper", "expver": "0001",
+            "date": "20240603", "time": "1200"}
+
+
+def make_tier(kind: str, tmp_path, tag: str):
+    if kind == "daos":
+        return make_fdb("daos", schema=NWP_SCHEMA_DAOS, engine=DaosEngine())
+    return make_fdb("posix", schema=NWP_SCHEMA_POSIX, root=str(tmp_path / tag),
+                    stats=PosixStats(name=f"posix-{tag}"))
+
+
+def make_tiered(backend: str, tmp_path, clock, policies=None, batch_size=4):
+    """hot tier takes everything by rule; cold is the default tier."""
+    hot_kind = "daos" if backend in ("daos", "mixed") else "posix"
+    cold_kind = "posix" if backend in ("posix", "mixed") else "daos"
+    hot = make_tier(hot_kind, tmp_path, "hot")
+    cold = make_tier(cold_kind, tmp_path, "cold")
+    select = SelectFDB([("class=od", hot, "hot")], default=cold)
+    if policies is None:
+        policies = [{"from": "hot", "to": "default", "max_age_s": 10.0}]
+    lf = LifecycleFDB(select, policies, clock=clock, batch_size=batch_size)
+    return lf, select, hot, cold
+
+
+def raw_copies(tiers, key) -> int:
+    """Catalogue entries for *key* summed over the BARE tiers (bypassing
+    the select layer's overlay filtering)."""
+    return sum(sum(1 for _ in t.list(dict(key))) for t in tiers)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+class TestPolicy:
+    def test_from_dict_roundtrip(self):
+        p = LifecyclePolicy.from_dict(
+            {"from": "hot", "to": "default", "max_age_s": 5, "match": "step=0/to/5"}
+        )
+        assert p.kind == "demote"
+        assert p.applies(ident(step="3"))
+        assert not p.applies(ident(step="9"))
+        assert p.due(age_s=5.0, accesses=0)
+        assert not p.due(age_s=4.9, accesses=0)
+
+    def test_access_count_condition(self):
+        p = LifecyclePolicy.from_dict({"from": "hot", "to": "default",
+                                       "max_age_s": 0, "max_accesses": 1})
+        assert p.due(age_s=0.0, accesses=1)
+        assert not p.due(age_s=0.0, accesses=2)
+
+    def test_promotion_policy(self):
+        p = LifecyclePolicy.from_dict({"from": "default", "to": "hot", "promote_after": 2})
+        assert p.kind == "promote"
+        assert not p.due(age_s=1e9, accesses=1e9)  # promotion is event-driven
+
+    @pytest.mark.parametrize("bad", [
+        {"from": "hot", "to": "hot", "max_age_s": 1},        # self-move
+        {"from": "hot", "to": "default"},                       # no condition
+        {"from": "hot", "to": "default", "promote_after": 0},   # bad threshold
+        {"from": "hot", "to": "default", "promote_after": 1, "max_age_s": 1},
+        {"to": "cold", "max_age_s": 1},                      # missing from
+        {"from": "hot", "to": "default", "max_age_s": 1, "zzz": 1},
+    ])
+    def test_rejects(self, bad):
+        with pytest.raises(ValueError):
+            LifecyclePolicy.from_dict(bad)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestDemotion:
+    def test_age_driven_demotion_moves_and_stays_readable(self, backend, tmp_path):
+        clock = FakeClock()
+        lf, select, hot, cold = make_tiered(backend, tmp_path, clock)
+        keys = [ident(num=str(m), step=str(s)) for m in range(2) for s in range(3)]
+        payloads = {k: f"field-{i}".encode() * 50 for i, k in enumerate(keys)}
+        with lf:
+            for k in keys:
+                lf.archive(k, payloads[k])
+            lf.flush()
+            assert all(select.route(k) is hot for k in keys)
+
+            clock.t = 5.0
+            assert lf.run_once().migrated == 0  # younger than max_age_s
+
+            clock.t = 11.0
+            report = lf.run_once()
+            assert report.demoted == len(keys)
+            assert report.promoted == 0
+            assert report.bytes_moved == sum(len(v) for v in payloads.values())
+            for k in keys:
+                assert select.route(k) is cold
+                assert lf.read(k) == payloads[k]
+                assert raw_copies([hot, cold], k) == 1  # source copy removed
+            assert select.overlay_snapshot() == {"default": len(keys)}
+            # merged listing: every key exactly once, no duplicates
+            listed = sorted(tuple(sorted(e.key.items())) for e in lf.list({}))
+            assert listed == sorted(tuple(sorted(k.items())) for k in keys)
+            # a second cycle finds nothing left on the hot tier
+            assert lf.run_once().migrated == 0
+
+    def test_match_fragment_restricts_demotion(self, backend, tmp_path):
+        clock = FakeClock()
+        lf, select, hot, cold = make_tiered(
+            backend, tmp_path, clock,
+            policies=[{"from": "hot", "to": "default", "max_age_s": 0,
+                       "match": "step=0/to/1"}],
+        )
+        with lf:
+            old = [ident(step=s) for s in ("0", "1")]
+            recent = [ident(step=s) for s in ("2", "3")]
+            for k in old + recent:
+                lf.archive(k, b"x" * 64)
+            lf.flush()
+            report = lf.run_once()
+            assert report.demoted == len(old)
+            assert all(select.route(k) is cold for k in old)
+            assert all(select.route(k) is hot for k in recent)
+
+    def test_max_accesses_keeps_hot_fields_hot(self, backend, tmp_path):
+        clock = FakeClock()
+        lf, select, hot, cold = make_tiered(
+            backend, tmp_path, clock,
+            policies=[{"from": "hot", "to": "default", "max_age_s": 0,
+                       "max_accesses": 0}],
+        )
+        with lf:
+            popular, idle = ident(param="2t"), ident(param="10u")
+            lf.archive(popular, b"p" * 64)
+            lf.archive(idle, b"i" * 64)
+            lf.flush()
+            assert lf.read(popular) == b"p" * 64  # one access
+            report = lf.run_once()
+            assert report.demoted == 1
+            assert select.route(idle) is cold
+            assert select.route(popular) is hot
+
+    def test_rearchive_after_demotion_follows_overlay(self, backend, tmp_path):
+        clock = FakeClock()
+        lf, select, hot, cold = make_tiered(backend, tmp_path, clock)
+        with lf:
+            k = ident()
+            lf.archive(k, b"v1" * 32)
+            lf.flush()
+            clock.t = 11.0
+            assert lf.run_once().demoted == 1
+            # the key now lives on cold; a re-archive must overwrite THERE,
+            # not resurrect a hot copy beside it
+            lf.archive(k, b"v2" * 32)
+            lf.flush()
+            assert lf.read(k) == b"v2" * 32
+            assert raw_copies([hot, cold], k) == 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestPromotion:
+    def test_promote_on_access(self, backend, tmp_path):
+        clock = FakeClock()
+        lf, select, hot, cold = make_tiered(
+            backend, tmp_path, clock,
+            policies=[
+                {"from": "hot", "to": "default", "max_age_s": 10.0},
+                {"from": "default", "to": "hot", "promote_after": 2},
+            ],
+        )
+        with lf:
+            k = ident()
+            lf.archive(k, b"f" * 128)
+            lf.flush()
+            clock.t = 11.0
+            assert lf.run_once().demoted == 1
+            assert select.route(k) is cold
+            assert lf.read(k) == b"f" * 128  # 1st access: below threshold
+            assert lf.run_once().promoted == 0
+            assert lf.read(k) == b"f" * 128  # 2nd access: queues promotion
+            report = lf.run_once()
+            assert report.promoted == 1
+            assert select.route(k) is hot
+            assert lf.read(k) == b"f" * 128
+            assert raw_copies([hot, cold], k) == 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestExactlyOneCopy:
+    def test_midflight_invariant_at_flip(self, backend, tmp_path):
+        """At the flip the destination copy is already stored AND
+        catalogued (store-before-catalogue held on the destination tier)
+        while the source copy still exists — two raw copies — yet the
+        select layer shows exactly one, and reads serve the right bytes."""
+        clock = FakeClock()
+        lf, select, hot, cold = make_tiered(backend, tmp_path, clock, batch_size=2)
+        keys = [ident(num=str(m), step=str(s)) for m in range(2) for s in range(2)]
+        payloads = {k: f"mid-{i}".encode() * 40 for i, k in enumerate(keys)}
+        observed = []
+
+        def at_flip(moved):
+            for k in moved:
+                raw = raw_copies([hot, cold], k)
+                visible = sum(1 for _ in select.list(dict(k)))
+                observed.append((raw, visible, lf.read(k) == payloads[k]))
+
+        lf.add_move_listener(at_flip)
+        with lf:
+            for k in keys:
+                lf.archive(k, payloads[k])
+            lf.flush()
+            clock.t = 11.0
+            report = lf.run_once()
+            assert report.demoted == len(keys)
+            assert report.batches == 2
+        assert len(observed) == len(keys)
+        for raw, visible, bytes_ok in observed:
+            assert raw == 2       # both tiers hold a catalogue entry...
+            assert visible == 1   # ...but exactly one is authoritative
+            assert bytes_ok
+
+    def test_concurrent_reads_during_migration(self, backend, tmp_path):
+        """Hypothesis-style churn loop: a reader hammers every key (in
+        shifting order) while the migrator demotes the dataset underneath.
+        Every read returns the exact original bytes — never None, never
+        torn — and afterwards each key has exactly one catalogue copy."""
+        clock = FakeClock()
+        lf, select, hot, cold = make_tiered(backend, tmp_path, clock, batch_size=2)
+        keys = [ident(num=str(m), step=str(s), param=p)
+                for m in range(2) for s in range(3) for p in ("2t", "10u")]
+        payloads = {k: f"churn-{i}-".encode() * 64 for i, k in enumerate(keys)}
+        with lf:
+            for k in keys:
+                lf.archive(k, payloads[k])
+            lf.flush()
+            clock.t = 11.0
+
+            failures = []
+            done = threading.Event()
+
+            def reader():
+                rounds = 0
+                while not done.is_set() or rounds < 3:
+                    rounds += 1
+                    rotated = keys[rounds % len(keys):] + keys[:rounds % len(keys)]
+                    for k, data in zip(rotated, lf.read_batch(rotated)):
+                        if data != payloads[k]:
+                            failures.append((k, data))
+                            done.set()
+                            return
+
+            t = threading.Thread(target=reader)
+            t.start()
+            try:
+                report = lf.run_once()
+            finally:
+                done.set()
+                t.join()
+            assert not failures
+            assert report.demoted == len(keys)
+            for k in keys:
+                assert select.route(k) is cold
+                assert raw_copies([hot, cold], k) == 1
+                assert lf.read(k) == payloads[k]
+
+
+@pytest.mark.parametrize("backend", ["posix", "daos"])
+class TestWipeReadRace:
+    def test_handle_resolved_before_wipe_never_tears(self, backend, tmp_path):
+        fdb = make_tier(backend, tmp_path, "race")
+        with fdb:
+            k = ident()
+            fdb.archive(k, b"r" * 256)
+            fdb.flush()
+            h = fdb.retrieve(k)
+            assert h is not None
+            fdb.wipe(dataset_req())
+            # the handle surfaces the typed error (or, if the backend can
+            # still serve the bytes, the FULL field) — never a torn read
+            try:
+                data = h.read()
+            except FieldGoneError:
+                data = None
+            assert data in (None, b"r" * 256)
+            # client-level read after the wipe is a clean miss
+            assert fdb.read(k) is None
+
+    def test_client_read_rereads_once_after_field_gone(self, backend, tmp_path):
+        clock = FakeClock()
+        lf, select, hot, cold = make_tiered(backend, tmp_path, clock)
+        with lf:
+            k = ident()
+            lf.archive(k, b"m" * 256)
+            lf.flush()
+            h = lf.retrieve(k)  # resolved against the hot tier
+            clock.t = 11.0
+            assert lf.run_once().demoted == 1  # hot copy punched
+            # the stale handle either still reads (posix keeps the stream
+            # file) or raises FieldGoneError (daos punched the object);
+            # the client-level path re-resolves through the flipped
+            # overlay and always returns the full bytes
+            assert lf._read_handle(k, h) == b"m" * 256
+            assert lf.read(k) == b"m" * 256
+
+
+class TestNegativeCache:
+    def _cached(self, tmp_path, clock, **kw):
+        inner = make_tier("posix", tmp_path, "neg")
+        return CacheFDB(inner, negative_ttl=5.0, clock=clock, **kw)
+
+    def test_absence_memoised_until_ttl(self, tmp_path):
+        clock = FakeClock()
+        cfdb = self._cached(tmp_path, clock)
+        with cfdb:
+            k = ident()
+            assert cfdb.read(k) is None  # backend round, memoised
+            assert cfdb.read(k) is None  # served from the negative cache
+            snap = cfdb.cache_snapshot()
+            assert snap["neg_stores"] == 1
+            assert snap["neg_hits"] == 1
+            assert snap["misses"] == 1
+            assert cfdb.cache_stats.ops["cache_neg_hit"] == 1
+            clock.t = 6.0  # past negative_ttl: re-probe the backend
+            assert cfdb.read(k) is None
+            snap = cfdb.cache_snapshot()
+            assert snap["misses"] == 2
+            assert snap["neg_stores"] == 2
+
+    def test_archive_invalidates_negative_entry(self, tmp_path):
+        clock = FakeClock()
+        cfdb = self._cached(tmp_path, clock)
+        with cfdb:
+            k = ident()
+            assert cfdb.read(k) is None
+            assert cfdb.cache_snapshot()["neg_entries"] == 1
+            cfdb.archive(k, b"now-present" * 8)
+            cfdb.flush()
+            # within the TTL window, yet the write purged the memo
+            assert cfdb.read(k) == b"now-present" * 8
+
+    def test_disabled_by_default(self, tmp_path):
+        inner = make_tier("posix", tmp_path, "negoff")
+        cfdb = CacheFDB(inner)
+        with cfdb:
+            k = ident()
+            assert cfdb.read(k) is None
+            assert cfdb.read(k) is None
+            snap = cfdb.cache_snapshot()
+            assert snap["misses"] == 2  # every probe pays the backend
+            assert snap["neg_stores"] == 0
+
+
+class TestComposition:
+    def test_lifecycle_config_builds_and_migrates(self, tmp_path):
+        cfg = {
+            "type": "lifecycle",
+            "policies": [{"from": "hot", "to": "default", "max_age_s": 0}],
+            "batch_size": 8,
+            "inner": {
+                "type": "select",
+                "rules": [{"match": "class=od", "name": "hot",
+                           "fdb": {"backend": "posix",
+                                   "root": str(tmp_path / "hot")}}],
+                "default": {"type": "async", "writers": 2,
+                            "inner": {"backend": "posix",
+                                      "root": str(tmp_path / "cold")}},
+            },
+        }
+        FDBConfig(cfg)  # validates + JSON round-trips
+        lf = build_fdb(cfg)
+        assert isinstance(lf, LifecycleFDB)
+        with lf:
+            assert lf.select.tier_names == ("hot", "default")
+            k = ident()
+            lf.archive(k, b"cfg" * 30)
+            lf.flush()
+            report = lf.run_once()
+            assert report.demoted == 1
+            assert lf.read(k) == b"cfg" * 30
+            assert lf.select.route(k) is lf.select.resolve_tier("default")
+
+    @pytest.mark.parametrize("bad", [
+        {"type": "lifecycle", "inner": {"backend": "posix", "root": "/tmp/x"}},
+        {"type": "lifecycle", "policies": [],
+         "inner": {"backend": "posix", "root": "/tmp/x"}},
+        {"type": "lifecycle", "policies": [{"from": "a", "to": "a", "max_age_s": 1}],
+         "inner": {"backend": "posix", "root": "/tmp/x"}},
+        {"type": "lifecycle", "policies": [{"from": "a", "to": "b", "max_age_s": 1}],
+         "batch_size": 0, "inner": {"backend": "posix", "root": "/tmp/x"}},
+        {"type": "cache", "negative_ttl": -1,
+         "inner": {"backend": "posix", "root": "/tmp/x"}},
+        {"type": "select", "rules": [{"match": "class=od", "name": 3,
+                                      "fdb": {"backend": "posix", "root": "/tmp/x"}}]},
+    ])
+    def test_config_rejects(self, bad):
+        with pytest.raises(ConfigError):
+            FDBConfig(bad)
+
+    def test_unknown_policy_tier_fails_at_build(self, tmp_path):
+        lf_inner = SelectFDB(
+            [("class=od", make_tier("posix", tmp_path, "h"), "hot")],
+            default=make_tier("posix", tmp_path, "c"),
+        )
+        with pytest.raises(ValueError, match="unknown select tier"):
+            LifecycleFDB(lf_inner, [{"from": "hot", "to": "nope", "max_age_s": 1}])
+
+    def test_cache_over_lifecycle_invalidates_moved_keys(self, tmp_path):
+        clock = FakeClock()
+        lf, select, hot, cold = make_tiered("posix", tmp_path, clock)
+        cfdb = CacheFDB(lf, negative_ttl=60.0, clock=clock)
+        with cfdb:
+            k = ident()
+            cfdb.archive(k, b"c" * 100)
+            cfdb.flush()
+            assert cfdb.read(k) == b"c" * 100  # fills the cache
+            tok = cfdb._token(k)
+            assert cfdb._cache.get(tok)[1] == "hit"
+            clock.t = 11.0
+            assert lf.run_once().demoted == 1
+            # the flip listener dropped the moved key from the cache...
+            assert cfdb._cache.get(tok)[1] != "hit"
+            # ...and a fresh read-through serves the cold tier's bytes
+            assert cfdb.read(k) == b"c" * 100
+
+    def test_lifecycle_snapshot_telemetry(self, tmp_path):
+        clock = FakeClock()
+        lf, select, hot, cold = make_tiered("posix", tmp_path, clock)
+        with lf:
+            for s in range(3):
+                lf.archive(ident(step=str(s)), b"t" * 10)
+            lf.flush()
+            clock.t = 11.0
+            lf.run_once()
+            snap = lf.lifecycle_snapshot()
+            assert snap["tracked"] == 3
+            assert snap["migrated_total"] == 3
+            assert snap["overlay"] == {"default": 3}
+            assert snap["policies"] == ["demote:hot->default"]
+            assert "lifecycle" in lf.stats_snapshot()
